@@ -1,0 +1,35 @@
+"""Beyond-paper: the paper's provisioning questions answered for TPU pods
+serving the assigned architectures (repro.core.advisor)."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.configs import get_config
+from repro.core import advisor
+
+CASES = (
+    ("llama3-405b", 128, 32768),
+    ("mixtral-8x22b", 128, 32768),
+    ("mamba2-1.3b", 128, 32768),
+    ("internlm2-1.8b", 128, 32768),
+)
+
+
+def rows():
+    out = []
+    for arch, batch, seq in CASES:
+        cfg = get_config(arch)
+        a, us = timed(advisor.advise_decode_sla, cfg, batch, seq, 0.020)
+        d = a.design
+        out.append((f"advisor/sla20ms/{arch}", us,
+                    f"chips={d.compute_chips};power={d.power/1e3:.1f}kW;"
+                    f"rt={d.response_time*1e3:.2f}ms"))
+    cfg = get_config("llama3-405b")
+    table, us = timed(advisor.when_to_use_tpu, cfg, 128, 32768, repeat=1)
+    for row in table:
+        out.append((f"advisor/tpu_vs_host/llama3-405b/{row['sla_ms']:g}ms",
+                    us / len(table),
+                    f"tpu={row['tpu_power_kw']:.0f}kW;"
+                    f"host={row['host_power_kw']:.0f}kW;"
+                    f"tpu_wins={row['tpu_wins_power']};"
+                    f"host_overprov={row['host_overprovision_x']:.0f}x"))
+    return out

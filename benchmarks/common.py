@@ -1,0 +1,23 @@
+"""Benchmark harness plumbing: timing + CSV row emission.
+
+Contract: every benchmark module exposes `rows() -> list[tuple]` of
+(name, us_per_call, derived) and run.py prints them all as CSV.
+"""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeat: int = 5, **kw):
+    """Returns (result, microseconds per call)."""
+    fn(*args, **kw)                     # warm (jit/cache)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

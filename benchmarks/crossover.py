@@ -1,0 +1,29 @@
+"""Paper §5.1/§6.1 crossover sensitivity: base (~60 ms), 50% accessed
+(~170 ms), 8x-denser die stacks (~800 ms band), 10x lower compute power."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core import (DIE_STACKED, TRADITIONAL, Workload,
+                        power_crossover_sla)
+from repro.core.systems import TiB
+
+WL = Workload(16 * TiB, 0.20)
+
+
+def rows():
+    out = []
+    t, us = timed(power_crossover_sla, TRADITIONAL, DIE_STACKED, WL,
+                  repeat=1)
+    out.append(("crossover/base", us, f"{t*1e3:.0f}ms(paper~60)"))
+    t, us = timed(power_crossover_sla, TRADITIONAL, DIE_STACKED,
+                  Workload(16 * TiB, 0.50), repeat=1)
+    out.append(("crossover/50pct_accessed", us, f"{t*1e3:.0f}ms(paper~170)"))
+    t, us = timed(power_crossover_sla, TRADITIONAL,
+                  DIE_STACKED.with_density(8), WL, repeat=1)
+    out.append(("crossover/8x_density", us,
+                f"{t*1e3:.0f}ms(paper~800,band)"))
+    t, us = timed(power_crossover_sla, TRADITIONAL,
+                  DIE_STACKED.with_compute_power(0.1), WL, repeat=1)
+    out.append(("crossover/0.1x_core_power", us,
+                f"{(t or 0)*1e3:.0f}ms(§6.1 lever)"))
+    return out

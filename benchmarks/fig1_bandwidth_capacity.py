@@ -1,0 +1,32 @@
+"""Paper Fig. 1: time to read a fraction of memory capacity per system.
+
+Derived values: the bandwidth-capacity ratios (die/trad = 80x,
+die/big = 341x) and the 20%-of-capacity read times.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import BIG_MEMORY, DIE_STACKED, TRADITIONAL
+
+FRACTIONS = np.logspace(-3, 0, 16)
+
+
+def curve(system):
+    """Seconds to read `f` of one socket's capacity, per fraction."""
+    return {f: f * system.chip_capacity / system.chip_bandwidth
+            for f in FRACTIONS}
+
+
+def rows():
+    out = []
+    for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+        c, us = timed(curve, s)
+        t20 = 0.2 * s.chip_capacity / s.chip_bandwidth
+        out.append((f"fig1/read20pct/{s.name}", us, f"{t20*1e3:.2f}ms"))
+    r_trad = DIE_STACKED.bandwidth_capacity_ratio / TRADITIONAL.bandwidth_capacity_ratio
+    r_big = DIE_STACKED.bandwidth_capacity_ratio / BIG_MEMORY.bandwidth_capacity_ratio
+    out.append(("fig1/bw_cap_ratio_die_vs_trad", 0.0, f"{r_trad:.0f}x"))
+    out.append(("fig1/bw_cap_ratio_die_vs_big", 0.0, f"{r_big:.0f}x"))
+    return out

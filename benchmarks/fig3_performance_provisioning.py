@@ -1,0 +1,30 @@
+"""Paper Fig. 3 + Table 2: performance-provisioned clusters at
+10 ms / 100 ms / 1 s SLAs — power breakdown + memory capacity."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core import (BIG_MEMORY, DIE_STACKED, TRADITIONAL, Workload,
+                        provision_performance)
+from repro.core.systems import TiB
+
+WL = Workload(16 * TiB, 0.20)
+SLAS = (0.010, 0.100, 1.000)
+
+
+def rows():
+    out = []
+    for sla in SLAS:
+        for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+            d, us = timed(provision_performance, s, WL, sla)
+            out.append((
+                f"fig3/sla{int(sla*1e3)}ms/{s.name}", us,
+                f"power={d.power/1e3:.1f}kW;capacity={d.memory_capacity/TiB:.0f}TiB;"
+                f"overprov={d.overprovision_factor:.1f}x;blades={d.blades};"
+                f"chips={d.compute_chips}"))
+    # Table 2 cluster bandwidths at 10 ms
+    for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+        d, us = timed(provision_performance, s, WL, 0.010)
+        out.append((f"table2/10ms/{s.name}", us,
+                    f"blades={d.blades};chips={d.compute_chips};"
+                    f"bandwidth={d.aggregate_bandwidth/1e12:.0f}TBps"))
+    return out

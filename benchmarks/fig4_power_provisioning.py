@@ -1,0 +1,24 @@
+"""Paper Fig. 4: power-provisioned clusters at 1 MW / 250 kW / 50 kW —
+response time + memory capacity."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core import (BIG_MEMORY, DIE_STACKED, TRADITIONAL, Workload,
+                        provision_power)
+from repro.core.systems import TiB
+
+WL = Workload(16 * TiB, 0.20)
+BUDGETS = (1e6, 250e3, 50e3)
+
+
+def rows():
+    out = []
+    for budget in BUDGETS:
+        for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+            d, us = timed(provision_power, s, WL, budget)
+            out.append((
+                f"fig4/{int(budget/1e3)}kW/{s.name}", us,
+                f"rt={d.response_time*1e3:.1f}ms;"
+                f"capacity={d.memory_capacity/TiB:.0f}TiB;"
+                f"cores_per_chip={d.cores_per_chip};power={d.power/1e3:.1f}kW"))
+    return out

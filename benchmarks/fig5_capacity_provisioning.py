@@ -1,0 +1,30 @@
+"""Paper Fig. 5: capacity-provisioned clusters (160/32/16 TiB, constant
+3.2 TiB accessed) — response time + power."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core import (BIG_MEMORY, DIE_STACKED, TRADITIONAL, Workload,
+                        provision_capacity)
+from repro.core.systems import TiB
+
+WL = Workload(16 * TiB, 0.20)
+SIZES = (160 * TiB, 32 * TiB, 16 * TiB)
+
+
+def rows():
+    out = []
+    for size in SIZES:
+        for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+            d, us = timed(provision_capacity, s, WL, capacity=size)
+            out.append((
+                f"fig5/{int(size/TiB)}TiB/{s.name}", us,
+                f"rt={d.response_time*1e3:.1f}ms;power={d.power/1e3:.1f}kW;"
+                f"chips={d.compute_chips}"))
+    # headline speedups at 16 TiB
+    ds = {s.name: provision_capacity(s, WL) for s in
+          (TRADITIONAL, BIG_MEMORY, DIE_STACKED)}
+    out.append(("fig5/speedup_die_vs_big", 0.0,
+                f"{ds['big-memory'].response_time/ds['die-stacked'].response_time:.0f}x"))
+    out.append(("fig5/speedup_die_vs_trad", 0.0,
+                f"{ds['traditional'].response_time/ds['die-stacked'].response_time:.0f}x"))
+    return out

@@ -1,0 +1,26 @@
+"""Paper Fig. 6: (a) energy per query at 16 TiB; (b) power breakdown of a
+1 MW-provisioned cluster."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core import (BIG_MEMORY, DIE_STACKED, TRADITIONAL, Workload,
+                        provision_capacity, provision_power)
+from repro.core.systems import TiB
+
+WL = Workload(16 * TiB, 0.20)
+
+
+def rows():
+    out = []
+    for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+        d, us = timed(provision_capacity, s, WL)
+        out.append((f"fig6a/energy/{s.name}", us,
+                    f"{d.energy_per_query:.0f}J"))
+    for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+        d, us = timed(provision_power, s, WL, 1e6)
+        tot = d.power
+        out.append((
+            f"fig6b/power_breakdown/{s.name}", us,
+            f"compute={d.compute_power/tot:.2f};mem={d.mem_power/tot:.2f};"
+            f"overhead={d.overhead_power/tot:.2f}"))
+    return out

@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative), so wall-time rows time the jnp fallback path and `derived`
+reports the scan's achieved GB/s plus the analytic arithmetic intensity the
+kernel presents to the roofline (the paper's ~4 bytes/instr claim)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.db import Predicate, Table, scan_aggregate_query
+from repro.kernels.scan_filter import ops as scan_ops
+from repro.kernels.scan_filter import ref as scan_ref
+
+
+def rows():
+    out = []
+    n = 1 << 22                      # 4M codes
+    codes = np.random.default_rng(0).integers(0, 128, n)
+    packed = jnp.asarray(scan_ref.pack(codes, 8))
+
+    def scan_ref_path():
+        return scan_ops.scan_filter(packed, 64, "lt", 8,
+                                    use_kernel=False).block_until_ready()
+
+    _, us = timed(scan_ref_path)
+    gbps = packed.nbytes / (us / 1e6) / 1e9
+    out.append(("kernels/scan8b_4M/jnp_cpu", us, f"{gbps:.2f}GBps"))
+    out.append(("kernels/scan8b/intensity", 0.0,
+                "3int_ops_per_4B_word(bandwidth-bound)"))
+
+    t = Table.synthetic("t", 1 << 20, {"a": 8, "b": 8})
+    def q():
+        r = scan_aggregate_query(t, [Predicate("a", "lt", 64)], "b",
+                                 use_kernel=False)
+        jax.block_until_ready(r["sum"])
+        return r
+    r, us = timed(q, repeat=3)
+    out.append(("db/scan_aggregate_1M", us,
+                f"sel={float(r['selectivity']):.3f}"))
+    return out

@@ -1,0 +1,81 @@
+"""The 40-cell roofline table, read from the dry-run artifacts
+(artifacts/dryrun/<mesh>/<arch>__<shape>.json). Also used to regenerate
+EXPERIMENTS.md §Roofline (python -m benchmarks.roofline_table --markdown).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(mesh: str = "single"):
+    cells = []
+    d = ART / mesh
+    if not d.exists():
+        return cells
+    for p in sorted(d.glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def rows():
+    out = []
+    for mesh in ("single", "multi", "single-opt", "multi-opt"):
+        for c in load(mesh):
+            name = f"roofline/{mesh}/{c['arch']}/{c['shape']}"
+            if c.get("status") == "skipped-by-design":
+                out.append((name, 0.0, "skipped-by-design"))
+                continue
+            if c.get("status") != "ok":
+                out.append((name, 0.0, f"ERROR:{c.get('error','?')[:60]}"))
+                continue
+            r = c.get("roofline")
+            if not r:
+                out.append((name, c.get("compile_s", 0) * 1e6, "compiled"))
+                continue
+            u = c.get("utilization", {})
+            out.append((
+                name, c.get("compile_s", 0) * 1e6,
+                f"compute={r['compute_s']*1e3:.2f}ms;"
+                f"mem={r['memory_s']*1e3:.2f}ms;"
+                f"coll={r['collective_s']*1e3:.2f}ms;"
+                f"dom={r['dominant']};mfu={u.get('roofline_mfu', 0):.3f}"))
+    return out
+
+
+def markdown(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | roofline MFU | useful/HLO FLOPs | bytes/dev (GiB) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in load(mesh):
+        if c.get("status") == "skipped-by-design":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"skipped-by-design | — | — | — |")
+            continue
+        if c.get("status") != "ok" or "roofline" not in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | ? | ? | ? | "
+                         f"{c.get('status')} | ? | ? | ? |")
+            continue
+        r, u, m = c["roofline"], c["utilization"], c.get("memory", {})
+        dev_bytes = (m.get("argument_size_in_bytes", 0)
+                     + m.get("temp_size_in_bytes", 0)) / 2**30
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"{r['dominant']} | {u['roofline_mfu']:.3f} | "
+            f"{u['useful_vs_hlo_flops']:.2f} | {dev_bytes:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if "--markdown" in sys.argv:
+        mesh = "multi" if "--multi" in sys.argv else "single"
+        print(markdown(mesh))
+    else:
+        from benchmarks.common import emit
+        emit(rows())

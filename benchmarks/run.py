@@ -1,0 +1,41 @@
+"""Benchmark driver: one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = (
+    "benchmarks.fig1_bandwidth_capacity",
+    "benchmarks.fig3_performance_provisioning",
+    "benchmarks.fig4_power_provisioning",
+    "benchmarks.fig5_capacity_provisioning",
+    "benchmarks.fig6_energy",
+    "benchmarks.crossover",
+    "benchmarks.advisor_tpu",
+    "benchmarks.kernels_bench",
+    "benchmarks.roofline_table",
+)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for modname in MODULES:
+        try:
+            mod = __import__(modname, fromlist=["rows"])
+            emit(mod.rows())
+        except Exception:
+            failed.append(modname)
+            traceback.print_exc(file=sys.stderr)
+            print(f"{modname},0.0,ERROR")
+    if failed:
+        raise SystemExit(f"benchmark failures: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Walk the paper end-to-end: reproduce every figure's headline numbers,
+then the beyond-paper TPU rooflines from the dry-run artifacts.
+
+  PYTHONPATH=src python examples/bandwidth_model_walkthrough.py
+"""
+import json
+from pathlib import Path
+
+from repro.core import (BIG_MEMORY, DIE_STACKED, TRADITIONAL, Workload,
+                        power_crossover_sla, provision_capacity,
+                        provision_performance, provision_power)
+from repro.core.systems import TiB
+
+WL = Workload(16 * TiB, 0.20)
+
+print("— Fig. 1: bandwidth/capacity ratios —")
+for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+    print(f"  {s.name:12s} {s.bandwidth_capacity_ratio:8.4f}/s "
+          f"(reads 20% of its memory in "
+          f"{0.2/s.bandwidth_capacity_ratio*1e3:7.1f} ms)")
+
+print("— Fig. 3 / Table 2: 10 ms SLA —")
+for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+    d = provision_performance(s, WL, 0.010)
+    print(f"  {s.name:12s} chips={d.compute_chips:5d} blades={d.blades:5d} "
+          f"power={d.power/1e3:7.1f}kW overprov=x{d.overprovision_factor:5.1f}")
+
+print("— Fig. 4: 1 MW budget —")
+for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+    d = provision_power(s, WL, 1e6)
+    print(f"  {s.name:12s} rt={d.response_time*1e3:6.1f}ms "
+          f"capacity={d.memory_capacity/TiB:7.0f}TiB")
+
+print("— Fig. 5/6: capacity-provisioned 16 TiB —")
+for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+    d = provision_capacity(s, WL)
+    print(f"  {s.name:12s} rt={d.response_time*1e3:7.1f}ms "
+          f"power={d.power/1e3:7.1f}kW energy={d.energy_per_query:6.0f}J")
+
+t = power_crossover_sla(TRADITIONAL, DIE_STACKED, WL)
+print(f"— §5.1 crossover: die-stacked is power-cheaper below "
+      f"{t*1e3:.0f} ms SLA (paper: ~60 ms) —")
+
+art = Path(__file__).resolve().parents[1] / "artifacts/dryrun/single"
+if art.exists():
+    print("\n— beyond-paper: TPU roofline (single pod, from dry-run) —")
+    for p in sorted(art.glob("*__train_4k.json")):
+        c = json.loads(p.read_text())
+        if c.get("status") != "ok" or "roofline" not in c:
+            continue
+        r, u = c["roofline"], c["utilization"]
+        print(f"  {c['arch']:22s} dom={r['dominant']:10s} "
+              f"mfu={u['roofline_mfu']:.3f} "
+              f"(compute {r['compute_s']*1e3:8.1f}ms / mem "
+              f"{r['memory_s']*1e3:7.1f}ms / coll "
+              f"{r['collective_s']*1e3:8.1f}ms)")

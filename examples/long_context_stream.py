@@ -1,0 +1,65 @@
+"""Streaming long-context prefill: the `long_500k` story, runnable on CPU.
+
+Sub-quadratic archs (mamba2, recurrentgemma, mixtral-SWA) process
+arbitrarily long contexts as a stream of fixed-size segments with O(1)
+carried state — the bandwidth-capacity argument in its purest form: the
+memory a chip must hold (and re-read per token) is *constant* in context
+length, while full-attention archs grow linearly.
+
+This driver streams a long synthetic context through a reduced mamba2 in
+segments, verifying the segmented pass is numerically identical to the
+monolithic pass, then prints the per-token decode state sizes for the full
+configs (what the long_500k dry-run cells shard).
+
+  PYTHONPATH=src python examples/long_context_stream.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import traffic
+from repro.models import lm
+from repro.models.common import dtype_of
+
+ARCH = "mamba2-1.3b"
+SEGMENT = 128
+TOTAL = 1024
+
+cfg = get_config(ARCH).reduced(dtype="float32")
+params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (1, TOTAL), 0,
+                            cfg.vocab_size)
+
+# monolithic pass
+mono, _, _ = lm.prefill(params, cfg, tokens, caches=None)
+
+# streaming pass: state handoff between segments
+caches, _ = lm.init_caches(cfg, 1, SEGMENT, dtype_of(cfg.dtype))
+outs = []
+for s0 in range(0, TOTAL, SEGMENT):
+    seg = tokens[:, s0:s0 + SEGMENT]
+    positions = jnp.arange(s0, s0 + SEGMENT, dtype=jnp.int32)[None]
+    logits, caches, _ = lm.apply(params, cfg, seg, positions, caches=caches)
+    outs.append(logits)
+stream = jnp.concatenate(outs, axis=1)
+
+err = float(jnp.max(jnp.abs(mono - stream)))
+print(f"{ARCH}: streamed {TOTAL} tokens in {TOTAL//SEGMENT} segments of "
+      f"{SEGMENT}; max |logit diff| vs monolithic = {err:.2e}")
+assert err < 1e-3, err
+
+print("\nper-row decode state at 524,288-token context (full configs):")
+rows = {}
+for arch in ("mamba2-1.3b", "recurrentgemma-2b", "mixtral-8x22b",
+             "llama3-405b"):
+    c = get_config(arch)
+    state = traffic._state_bytes_per_row(c)
+    kv = traffic._kv_bytes_per_row(c, 524288)
+    rows[arch] = (state + kv) / 1e9
+    note = "constant in context" if c.subquadratic else "grows with context"
+    print(f"  {arch:22s} {rows[arch]:10.3f} GB/row   ({note})")
+print(f"\n-> the long_500k dry-run cells run only for the sub-quadratic "
+      f"archs; llama3-405b would need {rows['llama3-405b']:.0f} GB of KV "
+      f"per row ({rows['llama3-405b']/rows['mamba2-1.3b']:.0f}x mamba2's "
+      f"constant state).")

@@ -1,0 +1,60 @@
+"""Quickstart: the three layers of the framework in two minutes.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. the paper's analytical model (when is die-stacked memory worth it?),
+2. the paper's workload (bit-packed scan+aggregate through Pallas kernels),
+3. the modern workload (train a tiny assigned-architecture LM).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (BIG_MEMORY, DIE_STACKED, TRADITIONAL, Workload,
+                        provision_capacity, provision_performance)
+from repro.core.systems import TiB
+from repro.db import Predicate, Table, scan_aggregate_query
+from repro.models import lm
+from repro.train import optim, step as step_lib
+
+print("=" * 70)
+print("1. The paper's model: 16 TiB in-memory analytics, 20% per query")
+print("=" * 70)
+wl = Workload(db_size=16 * TiB, percent_accessed=0.20)
+for system in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+    d = provision_capacity(system, wl)
+    print(f"  {system.name:12s} response={d.response_time*1e3:8.1f}ms  "
+          f"power={d.power/1e3:7.1f}kW  chips={d.compute_chips}")
+d10 = provision_performance(DIE_STACKED, wl, sla=0.010)
+print(f"  -> 10ms SLA: die-stacked needs {d10.compute_chips} stacks, "
+      f"{d10.power/1e3:.0f} kW, overprovision x{d10.overprovision_factor:.1f}")
+
+print()
+print("=" * 70)
+print("2. The paper's workload: scan+aggregate on bit-packed columns")
+print("=" * 70)
+table = Table.synthetic("sales", 1 << 18, {"price": 16, "region": 8})
+result = scan_aggregate_query(
+    table, [Predicate("region", "lt", 32)], agg_column="price")
+print(f"  rows={table.num_rows:,} bytes={table.nbytes/1e6:.1f}MB")
+print(f"  SELECT sum(price) WHERE region < 32 -> sum={int(result['sum']):,} "
+      f"count={int(result['count']):,} "
+      f"selectivity={float(result['selectivity']):.3f}")
+
+print()
+print("=" * 70)
+print("3. The modern workload: train a reduced assigned arch (mamba2)")
+print("=" * 70)
+cfg = get_config("mamba2-1.3b").reduced(dtype="float32")
+opt_cfg = optim.AdamWConfig(lr=3e-3, warmup_steps=2, decay_steps=50)
+state, _ = step_lib.init_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+step = jax.jit(step_lib.make_train_step(cfg, opt_cfg))
+key = jax.random.PRNGKey(1)
+batch = {
+    "inputs": jax.random.randint(key, (4, 64), 0, cfg.vocab_size),
+    "labels": jax.random.randint(key, (4, 64), 0, cfg.vocab_size),
+}
+for i in range(5):
+    state, metrics = step(state, batch)
+    print(f"  step {i+1}  loss={float(metrics['loss']):.4f}")
+print("done.")

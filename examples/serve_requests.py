@@ -1,0 +1,55 @@
+"""End-to-end serving driver (the paper-appropriate e2e: response-time SLAs).
+
+Serves a small model with batched requests through the continuous-batching
+engine, then asks the advisor what a production cluster for this workload
+would look like under the paper's three provisioning regimes.
+
+  PYTHONPATH=src python examples/serve_requests.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import advisor
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+ARCH = "internlm2-1.8b"
+
+cfg = get_config(ARCH).reduced()
+params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+engine = ServeEngine(cfg, params, batch_slots=4, max_len=128)
+
+rng = np.random.default_rng(0)
+requests = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                    max_new_tokens=12) for i in range(10)]
+
+t0 = time.time()
+done = engine.run(requests)
+wall = time.time() - t0
+toks = sum(len(r.generated) for r in done)
+print(f"served {len(done)} requests / {toks} tokens in {wall:.2f}s "
+      f"({toks/wall:.1f} tok/s on CPU, reduced model)")
+for r in done[:3]:
+    print(f"  request {r.rid}: prompt={list(r.prompt)[:4]}... "
+          f"generated={r.generated}")
+
+print()
+print(f"advisor: production cluster for full-scale {ARCH} decode "
+      f"(batch=128, 32k ctx):")
+full = get_config(ARCH)
+for sla in (0.005, 0.020, 0.100):
+    a = advisor.advise_decode_sla(full, batch=128, seq_len=32768, sla_s=sla)
+    d = a.design
+    print(f"  SLA {sla*1e3:5.0f}ms -> {d.compute_chips:5d} chips  "
+          f"{d.power/1e3:7.1f} kW  rt={d.response_time*1e3:.2f}ms  "
+          f"overprov=x{d.overprovision_factor:.1f}")
+
+print()
+print("when to use the TPU (vs DDR5 host cluster), llama3-405b decode:")
+for row in advisor.when_to_use_tpu(get_config("llama3-405b"), 128, 32768):
+    print(f"  SLA {row['sla_ms']:5.0f}ms  tpu={row['tpu_power_kw']:8.1f}kW "
+          f"host={row['host_power_kw']:8.1f}kW  "
+          f"tpu_wins={row['tpu_wins_power']}")

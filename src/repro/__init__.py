@@ -1,0 +1,2 @@
+"""repro: bandwidth-provisioned multi-pod JAX framework (BPOE'16 reproduction)."""
+__version__ = "0.1.0"

@@ -1,0 +1,4 @@
+"""Sharded, versioned, elastic checkpointing."""
+from repro.checkpoint.store import CheckpointManager
+
+__all__ = ["CheckpointManager"]

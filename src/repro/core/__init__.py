@@ -1,0 +1,21 @@
+"""Core contribution of the paper: bandwidth-capacity provisioning.
+
+- `systems` / `model` / `provisioning`: the paper's analytical model (Eqs. 1-10)
+  and its three provisioning regimes.
+- `roofline` / `hlo`: the three-term roofline engine that generalizes the
+  model to compiled JAX programs on TPU meshes.
+- `advisor`: the paper's "when to use" question answered for TPU clusters.
+"""
+from repro.core.model import ClusterDesign, Workload, capacity_chips
+from repro.core.provisioning import (power_crossover_sla, provision_capacity,
+                                     provision_performance, provision_power)
+from repro.core.systems import (BIG_MEMORY, DIE_STACKED, PAPER_SYSTEMS,
+                                TRADITIONAL, TPU_V5E, SystemSpec, TPUSpec)
+
+__all__ = [
+    "ClusterDesign", "Workload", "capacity_chips",
+    "provision_capacity", "provision_performance", "provision_power",
+    "power_crossover_sla",
+    "SystemSpec", "TPUSpec", "TRADITIONAL", "BIG_MEMORY", "DIE_STACKED",
+    "PAPER_SYSTEMS", "TPU_V5E",
+]

@@ -1,0 +1,105 @@
+"""When-to-use advisor: the paper's provisioning model applied to TPU
+clusters serving/training the assigned LM architectures (beyond-paper
+contribution, DESIGN.md §2).
+
+The mapping: LLM decode is the bandwidth-bound "query" — each generated
+token touches the active parameters plus the KV cache (the modern `percent
+accessed`), and the in-memory "database" is params + cache. A TPU chip is
+the die-stacked node (HBM on compute); a DDR5 host is the traditional
+server. The paper's Eqs. 1-10 then answer: how many chips for an SLA, what
+does a power budget buy, what does capacity provisioning cost — with the
+collective roofline term (which the paper ignored, §6.2) layered on top.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig
+from repro.core import traffic
+from repro.core.model import ClusterDesign, Workload
+from repro.core.provisioning import (provision_capacity,
+                                     provision_performance, provision_power)
+from repro.core.systems import GB, SystemSpec, TPU_V5E, as_paper_system
+
+# a 2026 "traditional server" for the comparison set: dual-socket DDR5 host
+DDR5_HOST = SystemSpec(
+    name="ddr5-host",
+    module_capacity=64 * 2**30,      # 64 GiB DIMM
+    channel_bandwidth=38.4 * GB,     # DDR5-4800 channel
+    memory_channels=8,
+    channel_modules=2,
+    module_power=10.0,
+    blade_chips=2,
+    core_perf=12 * GB,               # AVX-512 scan/decode throughput per core
+    core_power=5.0,
+    max_chip_cores=64,
+    blade_overhead=200.0,
+)
+
+
+def lm_decode_workload(cfg: ArchConfig, batch: int, seq_len: int) -> Workload:
+    """The paper's (db_size, percent_accessed) for one decode step."""
+    params_bytes = 2.0 * cfg.param_count()
+    cache_bytes = (traffic._kv_bytes_per_row(cfg, seq_len)
+                   + traffic._state_bytes_per_row(cfg)) * batch
+    db = params_bytes + cache_bytes
+    touched = 2.0 * cfg.active_param_count() + cache_bytes
+    return Workload(db_size=db, percent_accessed=min(touched / db, 1.0))
+
+
+@dataclass(frozen=True)
+class Advice:
+    design: ClusterDesign
+    constraint: str
+    value: float
+
+    def summary(self) -> dict:
+        d = self.design.summary()
+        d["constraint"] = f"{self.constraint}={self.value:g}"
+        return d
+
+
+def advise_decode_sla(cfg: ArchConfig, batch: int, seq_len: int,
+                      sla_s: float, system: SystemSpec | None = None
+                      ) -> Advice:
+    """Chips needed so one batched decode step meets `sla_s` (per-token
+    latency SLA)."""
+    sys_ = system or as_paper_system(TPU_V5E)
+    wl = lm_decode_workload(cfg, batch, seq_len)
+    return Advice(provision_performance(sys_, wl, sla_s), "sla_s", sla_s)
+
+
+def advise_power(cfg: ArchConfig, batch: int, seq_len: int, budget_w: float,
+                 system: SystemSpec | None = None) -> Advice:
+    sys_ = system or as_paper_system(TPU_V5E)
+    wl = lm_decode_workload(cfg, batch, seq_len)
+    return Advice(provision_power(sys_, wl, budget_w), "power_w", budget_w)
+
+
+def advise_capacity(cfg: ArchConfig, batch: int, seq_len: int,
+                    system: SystemSpec | None = None) -> Advice:
+    sys_ = system or as_paper_system(TPU_V5E)
+    wl = lm_decode_workload(cfg, batch, seq_len)
+    return Advice(provision_capacity(sys_, wl), "capacity_b", wl.db_size)
+
+
+def when_to_use_tpu(cfg: ArchConfig, batch: int, seq_len: int,
+                    slas=(0.005, 0.020, 0.100, 0.500)) -> list[dict]:
+    """The paper's Fig. 3 question for 2026: at which per-token SLAs does
+    the TPU (die-stacked) cluster use less power than a DDR5-host cluster
+    for the same decode workload?"""
+    tpu = as_paper_system(TPU_V5E)
+    out = []
+    for sla in slas:
+        a = advise_decode_sla(cfg, batch, seq_len, sla, tpu)
+        b = advise_decode_sla(cfg, batch, seq_len, sla, DDR5_HOST)
+        out.append({
+            "sla_ms": sla * 1e3,
+            "tpu_chips": a.design.compute_chips,
+            "tpu_power_kw": a.design.power / 1e3,
+            "host_chips": b.design.compute_chips,
+            "host_power_kw": b.design.power / 1e3,
+            "host_overprovision_x": b.design.overprovision_factor,
+            "tpu_wins_power": a.design.power < b.design.power,
+        })
+    return out

@@ -1,0 +1,67 @@
+"""Vectorized + differentiable relaxation of the paper's model (jnp).
+
+Two beyond-paper uses:
+- `sweep_*`: evaluate whole SLA/power/capacity grids on-device in one call
+  (the paper's figures as single vmapped expressions).
+- `soft_*`: a smooth relaxation (ceil -> softplus-smoothed) that makes
+  cluster design differentiable — `grad(power)(sla, density, core_power)`
+  gives the sensitivity analysis of §6.1 analytically instead of by
+  finite differencing the discrete model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.model import Workload
+from repro.core.systems import SystemSpec
+
+
+def _soft_ceil(x, tau: float = 0.05):
+    """Smooth ceil: x + softplus-smoothed fractional correction."""
+    frac = x - jnp.floor(x)
+    return jnp.floor(x) + jax.nn.sigmoid((frac - 0.5) / tau)
+
+
+def soft_performance_power(system: SystemSpec, workload: Workload, sla,
+                           density: float = 1.0, core_power_scale: float = 1.0,
+                           hard: bool = False):
+    """Differentiable Eq. 10 under performance provisioning.
+
+    sla may be a scalar or an array (vectorizes); density / core_power_scale
+    are the §6.1 levers.
+    """
+    ceil = jnp.ceil if hard else _soft_ceil
+    sla = jnp.asarray(sla, jnp.float32)
+    required_bw = workload.bytes_accessed / sla
+    chip_cap = system.chip_capacity * density
+    cap_chips = ceil(workload.db_size / chip_cap)
+    bw_chips = ceil(required_bw / system.chip_peak_perf)
+    chips = jnp.maximum(cap_chips, bw_chips)
+    cores = jnp.clip(ceil(required_bw / chips / system.core_perf),
+                     1, system.max_chip_cores)
+    blades = ceil(chips / system.blade_chips)
+    mem_power = chips * system.modules_per_chip * system.module_power
+    compute_power = chips * cores * system.core_power * core_power_scale
+    return mem_power + compute_power + blades * system.blade_overhead
+
+
+def sweep_performance(system: SystemSpec, workload: Workload, slas):
+    """Power across an SLA grid (hard ceilings — matches the scalar model
+    to within the soft/hard gap, asserted in tests)."""
+    return soft_performance_power(system, workload, jnp.asarray(slas),
+                                  hard=True)
+
+
+def power_sensitivity(system: SystemSpec, workload: Workload, sla: float):
+    """d power / d (log density, log core_power) at the operating point —
+    the analytical version of the paper's §6.1 what-ifs."""
+
+    def f(log_density, log_cps):
+        return soft_performance_power(system, workload, sla,
+                                      density=jnp.exp(log_density),
+                                      core_power_scale=jnp.exp(log_cps))
+
+    g = jax.grad(f, argnums=(0, 1))(0.0, 0.0)
+    return {"d_power_d_log_density": float(g[0]),
+            "d_power_d_log_core_power": float(g[1])}

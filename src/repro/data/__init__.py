@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic, sharded, checkpoint-restartable."""
+from repro.data.pipeline import DataConfig, SyntheticLM, make_global_batch
+
+__all__ = ["DataConfig", "SyntheticLM", "make_global_batch"]

@@ -1,0 +1,5 @@
+"""In-memory analytic DB substrate (the paper's workload)."""
+from repro.db.columnar import BitPackedColumn, Table
+from repro.db.queries import Predicate, scan_aggregate_query
+
+__all__ = ["BitPackedColumn", "Table", "Predicate", "scan_aggregate_query"]

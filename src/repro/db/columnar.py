@@ -1,0 +1,82 @@
+"""Bit-packed in-memory column store (WideTable/BitWeaving-style).
+
+The paper's workload is scans over an in-memory analytic database; this is
+that database. Columns hold dictionary-encoded codes bit-packed into int32
+words (delimiter MSB per field kept 0 — see kernels/scan_filter), sharded
+row-wise across devices for cluster-scale scans.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.scan_filter import ref as packref
+
+
+@dataclass
+class BitPackedColumn:
+    name: str
+    code_bits: int
+    num_rows: int
+    words: jnp.ndarray                 # (n_words,) uint32
+    dictionary: np.ndarray | None = None   # code -> value (optional)
+
+    @classmethod
+    def from_values(cls, name: str, values, code_bits: int,
+                    dictionary=None) -> "BitPackedColumn":
+        values = np.asarray(values)
+        vmax = (1 << (code_bits - 1)) - 1
+        if values.max(initial=0) > vmax:
+            raise ValueError(f"codes exceed {code_bits}-bit payload")
+        words = packref.pack(values, code_bits)
+        return cls(name, code_bits, len(values), jnp.asarray(words),
+                   None if dictionary is None else np.asarray(dictionary))
+
+    @property
+    def codes_per_word(self) -> int:
+        return 32 // self.code_bits
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.words.size) * 4
+
+    def decode(self) -> np.ndarray:
+        vals = np.asarray(packref.unpack(self.words, self.code_bits))
+        vals = vals[:self.num_rows]
+        if self.dictionary is not None:
+            return self.dictionary[vals]
+        return vals
+
+
+@dataclass
+class Table:
+    name: str
+    columns: dict[str, BitPackedColumn] = field(default_factory=dict)
+
+    @property
+    def num_rows(self) -> int:
+        return next(iter(self.columns.values())).num_rows if self.columns else 0
+
+    @property
+    def nbytes(self) -> int:
+        return sum(c.nbytes for c in self.columns.values())
+
+    def add(self, col: BitPackedColumn) -> "Table":
+        if self.columns and col.num_rows != self.num_rows:
+            raise ValueError("row count mismatch")
+        self.columns[col.name] = col
+        return self
+
+    @classmethod
+    def synthetic(cls, name: str, num_rows: int, spec: dict[str, int],
+                  seed: int = 0) -> "Table":
+        """spec: column name -> code_bits; values uniform in payload range."""
+        rng = np.random.default_rng(seed)
+        t = cls(name)
+        for cname, bits in spec.items():
+            vmax = (1 << (bits - 1)) - 1
+            vals = rng.integers(0, vmax + 1, num_rows)
+            t.add(BitPackedColumn.from_values(cname, vals, bits))
+        return t

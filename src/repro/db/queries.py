@@ -1,0 +1,64 @@
+"""Scan + aggregate query plans over the bit-packed store.
+
+WideTable's observation (Li & Patel, VLDB'14): most analytic queries reduce
+to conjunctive predicate scans followed by aggregates. A query here is a
+list of Predicates ANDed together (masks combined word-wise) feeding a
+fused masked aggregate — exactly the operator mix the paper's `core_perf`
+models, now running through the Pallas kernels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.db.columnar import Table
+from repro.kernels.aggregate import ops as agg_ops
+from repro.kernels.scan_filter import ops as scan_ops
+from repro.kernels.scan_filter.ref import OPS
+
+
+@dataclass(frozen=True)
+class Predicate:
+    column: str
+    op: str          # lt | le | gt | ge | eq | ne
+    constant: int
+
+    def __post_init__(self):
+        assert self.op in OPS, self.op
+
+
+def scan_query(table: Table, predicates: list[Predicate],
+               use_kernel: bool = True):
+    """Conjunctive scan -> packed selection mask (delimiter-bit layout of
+    the first predicate's column)."""
+    assert predicates, "need at least one predicate"
+    bits = {table.columns[p.column].code_bits for p in predicates}
+    assert len(bits) == 1, "conjunction across widths: repack first"
+    mask = None
+    for p in predicates:
+        col = table.columns[p.column]
+        m = scan_ops.scan_filter(col.words, p.constant, p.op, col.code_bits,
+                                 use_kernel=use_kernel)
+        mask = m if mask is None else (mask & m)
+    return mask
+
+
+def scan_aggregate_query(table: Table, predicates: list[Predicate],
+                         agg_column: str, use_kernel: bool = True) -> dict:
+    """SELECT agg(agg_column) WHERE AND(predicates) — the paper's query."""
+    mask = scan_query(table, predicates, use_kernel=use_kernel)
+    col = table.columns[agg_column]
+    out = agg_ops.aggregate(col.words, mask, col.code_bits,
+                            use_kernel=use_kernel)
+    out["selectivity"] = (jnp.float32(out["count"])
+                          / jnp.float32(table.num_rows))
+    return out
+
+
+def bytes_scanned(table: Table, predicates: list[Predicate],
+                  agg_column: str) -> int:
+    """Bytes a query streams from memory — the model's `percent accessed`
+    numerator for this workload."""
+    cols = {p.column for p in predicates} | {agg_column}
+    return sum(table.columns[c].nbytes for c in cols)

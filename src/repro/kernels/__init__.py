@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated in interpret mode against ref.py oracles):
+
+- scan_filter:       BitWeaving-H predicate scan (the paper's workload)
+- aggregate:         fused masked aggregate (scan+aggregate query)
+- flash_attention:   blockwise online-softmax attention w/ causal skip
+- decode_attention:  split-K one-token decode over the ring KV cache
+- ssd_chunk:         Mamba-2 SSD chunk scan with VMEM-carried state
+
+Each package: kernel.py (pallas_call + BlockSpec), ops.py (public jit'd
+wrapper + jnp fallback), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,87 @@
+"""Fused masked aggregate (sum/count/min/max) Pallas TPU kernel.
+
+One pass over the packed column + packed predicate mask (the scan kernel's
+output): per grid step a (block_rows, 128) word tile is unpacked field-wise
+in VREGs (static shift loop, no gather), masked, and reduced into VMEM
+scratch accumulators; the final grid step writes the 4 scalars. With the
+scan kernel this forms the paper's scan+aggregate query plan executing at
+HBM bandwidth (arithmetic intensity ~= 2 int-ops/byte).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.scan_filter.kernel import DEFAULT_BLOCK_ROWS, LANES
+
+
+def _agg_kernel(x_ref, m_ref, o_ref, acc, *, code_bits: int, vmax: int):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _():
+        acc[0, 0] = jnp.int32(0)      # sum
+        acc[0, 1] = jnp.int32(0)      # count
+        acc[0, 2] = jnp.int32(vmax)   # min
+        acc[0, 3] = jnp.int32(0)      # max
+
+    x = x_ref[...]
+    m = m_ref[...]
+    c = 32 // code_bits
+    value_mask = jnp.uint32((1 << (code_bits - 1)) - 1)
+
+    s = jnp.int32(0)
+    cnt = jnp.int32(0)
+    mn = jnp.int32(vmax)
+    mx = jnp.int32(0)
+    for f in range(c):                       # static unroll over fields
+        vals = ((x >> jnp.uint32(f * code_bits)) & value_mask).astype(
+            jnp.int32)
+        bit = ((m >> jnp.uint32(f * code_bits + code_bits - 1))
+               & jnp.uint32(1)).astype(jnp.int32)
+        sel = bit == 1
+        s += jnp.sum(vals * bit)
+        cnt += jnp.sum(bit)
+        mn = jnp.minimum(mn, jnp.min(jnp.where(sel, vals, vmax)))
+        mx = jnp.maximum(mx, jnp.max(jnp.where(sel, vals, 0)))
+
+    acc[0, 0] += s
+    acc[0, 1] += cnt
+    acc[0, 2] = jnp.minimum(acc[0, 2], mn)
+    acc[0, 3] = jnp.maximum(acc[0, 3], mx)
+
+    @pl.when(i == n - 1)
+    def _():
+        o_ref[0, 0] = acc[0, 0]
+        o_ref[0, 1] = acc[0, 1]
+        o_ref[0, 2] = acc[0, 2]
+        o_ref[0, 3] = acc[0, 3]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("code_bits", "block_rows", "interpret"))
+def aggregate_packed(words2d, mask2d, *, code_bits: int,
+                     block_rows: int = DEFAULT_BLOCK_ROWS,
+                     interpret: bool = True):
+    """(rows, 128) packed words + packed mask -> int32[1, 4] =
+    [sum, count, min, max]."""
+    rows = words2d.shape[0]
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0, (rows, block_rows)
+    vmax = (1 << (code_bits - 1)) - 1
+    kernel = functools.partial(_agg_kernel, code_bits=code_bits, vmax=vmax)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 4), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, 4), jnp.int32)],
+        interpret=interpret,
+    )(words2d, mask2d)

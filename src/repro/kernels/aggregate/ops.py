@@ -1,0 +1,36 @@
+"""Public fused scan+aggregate API with jnp fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.aggregate import kernel as K
+from repro.kernels.aggregate import ref
+from repro.kernels.scan_filter.kernel import DEFAULT_BLOCK_ROWS, LANES
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def aggregate(words, mask_words, code_bits: int, use_kernel: bool = True,
+              block_rows: int | None = None):
+    """words/mask_words: (n_words,) uint32 -> dict(sum, count, min, max).
+
+    Codes in padded tail words have mask delimiter bits 0 and are ignored.
+    """
+    if not use_kernel:
+        return ref.aggregate_ref(words, mask_words, code_bits)
+    w = jnp.asarray(words, jnp.uint32)
+    m = jnp.asarray(mask_words, jnp.uint32)
+    pad = (-w.shape[0]) % LANES
+    w = jnp.pad(w, (0, pad)).reshape(-1, LANES)
+    m = jnp.pad(m, (0, pad)).reshape(-1, LANES)
+    rows = w.shape[0]
+    br = block_rows or min(DEFAULT_BLOCK_ROWS, rows)
+    while rows % br:
+        br -= 1
+    out = K.aggregate_packed(w, m, code_bits=code_bits, block_rows=br,
+                             interpret=_interpret())
+    return {"sum": out[0, 0], "count": out[0, 1],
+            "min": out[0, 2], "max": out[0, 3]}

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused masked aggregate over packed columns."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.scan_filter.ref import unpack, unpack_mask
+
+
+def aggregate_ref(words, mask_words, code_bits: int):
+    """Returns dict(sum, count, min, max) over codes whose delimiter bit is
+    set in mask_words. Empty selection: sum=0, count=0, min=vmax, max=0."""
+    vals = unpack(words, code_bits).astype(jnp.int32)
+    sel = unpack_mask(mask_words, code_bits)
+    vmax = jnp.int32((1 << (code_bits - 1)) - 1)
+    return {
+        "sum": jnp.sum(jnp.where(sel, vals, 0)),
+        "count": jnp.sum(sel.astype(jnp.int32)),
+        "min": jnp.min(jnp.where(sel, vals, vmax)),
+        "max": jnp.max(jnp.where(sel, vals, 0)),
+    }

@@ -1,0 +1,105 @@
+"""Split-K decode attention (FlashDecoding-style), Pallas TPU kernel.
+
+This is the paper's scan operator reincarnated: a single query token
+streams the whole KV cache at ~2 FLOP/byte — pure HBM bandwidth. The grid
+splits the cache into (B, KVH, S/bk) blocks; each step reduces its block
+into per-block partials (m, l, acc) in VMEM scratch carried across the
+sequential S sweep, writing the normalized output on the last block.
+
+The KV block is the ring-buffer layout of repro.models.attention: a stored
+pos plane drives causal/window/empty-slot masking inside the kernel, so the
+host never materializes a mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BK = 512
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                   g: int, d: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                              # (G, D)
+    k = k_ref[0]                                 # (bk, D)
+    v = v_ref[0]
+    kv_pos = pos_ref[0]                          # (1, bk) int32
+    q_pos = qpos_ref[0]                          # scalar int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    dp = q_pos - kv_pos                          # (1, bk)
+    ok = dp >= 0
+    if window:
+        ok &= dp < window
+    s = jnp.where(ok, s, NEG_INF)                # (G, bk) via broadcast
+
+    m_prev = m_scr[...]                          # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention_fwd(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                         bk: int = DEFAULT_BK, interpret: bool = True):
+    """q: (B, KVH, G, D); k/v: (B, S, KVH, D) ring cache; q_pos: (B,);
+    kv_pos: (B, S) stored positions. Returns (B, KVH, G, D)."""
+    b, kvh, g, d = q.shape
+    s = k.shape[1]
+    bk = min(bk, s)
+    assert s % bk == 0, (s, bk)
+
+    kt = jnp.swapaxes(k, 1, 2)                   # (B, KVH, S, D)
+    vt = jnp.swapaxes(v, 1, 2)
+    pos_b = jnp.broadcast_to(kv_pos[:, None, :], (b, 1, s))
+
+    kernel = functools.partial(_decode_kernel, scale=d ** -0.5,
+                               window=window, g=g, d=d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, s // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda bi, hi, ki: (bi * pl.num_programs(1) + hi, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bi, hi, ki: (bi * pl.num_programs(1) + hi, ki, 0)),
+            pl.BlockSpec((1, 1, bk), lambda bi, hi, ki: (bi, 0, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, q, kt.reshape(b * kvh, s, d), vt.reshape(b * kvh, s, d), pos_b)
+    return out

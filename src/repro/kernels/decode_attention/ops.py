@@ -1,0 +1,25 @@
+"""Public decode-attention API (inference-only; no vjp needed)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import kernel as K
+from repro.kernels.decode_attention import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                     bk: int = K.DEFAULT_BK, use_kernel: bool = True):
+    """q: (B, KVH, G, D); k/v: (B, S, KVH, D); q_pos (B,); kv_pos (B, S)."""
+    if not use_kernel:
+        return ref.decode_ref(q, k, v, q_pos, kv_pos, window=window)
+    s = k.shape[1]
+    bk_eff = min(bk, s)
+    while s % bk_eff:
+        bk_eff -= 1
+    return K.decode_attention_fwd(q, k, v, q_pos, kv_pos, window=window,
+                                  bk=bk_eff, interpret=_interpret())

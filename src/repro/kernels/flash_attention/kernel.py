@@ -1,0 +1,125 @@
+"""Blockwise online-softmax (flash) attention, Pallas TPU kernel.
+
+Grid (B*KVH, G, Sq/bq, Skv/bk) with the KV block innermost: m/l/acc live in
+VMEM scratch across the KV sweep, so HBM traffic is one Q read, one O write
+and (Skv/bk) K/V block streams — never the (Sq, Skv) score matrix. Block
+shapes are MXU-aligned (128 x head_dim). Causal + sliding-window masks are
+applied via block-start iotas; fully-masked blocks short-circuit on the
+m-update (no special control flow needed for correctness).
+
+Forward-only: training uses the differentiable blockwise JAX path
+(repro.models.attention._blockwise); ops.py wires a custom_vjp whose
+backward is the jnp reference, so the kernel is safe under jax.grad.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, window: int, sq: int, skv: int,
+                  bq: int, bk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal/window block skip: blocks fully outside the mask contribute
+    # nothing — predicate out their MXU work entirely (the ~2x causal
+    # saving the naive path can't express; EXPERIMENTS.md §Perf).
+    q_lo = qi * bq + (skv - sq)            # smallest q position in block
+    q_hi = q_lo + bq - 1
+    kv_lo = ki * bk
+    kv_hi = kv_lo + bk - 1
+    reachable = kv_lo <= q_hi              # some kv <= some q (causal)
+    if window:
+        reachable &= kv_hi > q_lo - window  # not entirely window-evicted
+
+    @pl.when(reachable)
+    def _():
+        q = q_ref[0, 0]                                  # (bq, d)
+        k = k_ref[0]                                     # (bk, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kv_pos = kv_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        d = q_pos - kv_pos
+        ok = d >= 0
+        if window:
+            ok &= d < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * alpha
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_fwd(q, k, v, *, window: int = 0,
+                        bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                        interpret: bool = True):
+    """q: (B, KVH, G, Sq, D); k/v: (B, KVH, Skv, D) -> (B, KVH, G, Sq, D).
+
+    Positions are arange with suffix alignment (q rows are the last Sq of
+    the Skv context) — prefill semantics.
+    """
+    b, kvh, g, sq, d = q.shape
+    skv = k.shape[2]
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+
+    kernel = functools.partial(_flash_kernel, scale=d ** -0.5, window=window,
+                               sq=sq, skv=skv, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b * kvh, g, sq // bq, skv // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda h, gi, qi, ki: (h, gi, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, gi, qi, ki: (h, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, gi, qi, ki: (h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda h, gi, qi, ki: (h, gi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, g, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(b * kvh, g, sq, d),
+      k.reshape(b * kvh, skv, d),
+      v.reshape(b * kvh, skv, d)).reshape(b, kvh, g, sq, d)

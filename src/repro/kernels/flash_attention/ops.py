@@ -1,0 +1,54 @@
+"""Public flash attention API.
+
+- `flash_attention(q5, k, v, ...)` — kernel-native layout, custom_vjp: the
+  forward runs the Pallas kernel, the backward differentiates the jnp
+  reference (correct gradients, kernel-speed forward).
+- `flash_attention` (models layout) — adapter used by
+  repro.models.attention when attn_impl == "flash": accepts the model's
+  (B, S, KV, G, H) q and (B, T, KV, H) k/v with explicit positions; falls
+  back to the blockwise path when positions are not plain aranges.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash5(q, k, v, window: int = 0):
+    return K.flash_attention_fwd(q, k, v, window=window,
+                                 interpret=_interpret())
+
+
+def _fwd(q, k, v, window):
+    return flash5(q, k, v, window), (q, k, v)
+
+
+def _bwd(window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(
+        q_, k_, v_, window=window), q, k, v)
+    return vjp(g)
+
+
+flash5.defvjp(_fwd, _bwd)
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, window: int = 0):
+    """Model-layout adapter: q (B,Sq,KV,G,H), k/v (B,Skv,KV,H)."""
+    b, sq, kvh, g, h = q.shape
+    skv = k.shape[1]
+    q5 = jnp.moveaxis(q, 1, 3)          # (B,KV,G,Sq,H)
+    k4 = jnp.moveaxis(k, 1, 2)          # (B,KV,Skv,H)
+    v4 = jnp.moveaxis(v, 1, 2)
+    o5 = flash5(q5, k4, v4, window)
+    return jnp.moveaxis(o5, 3, 1)       # back to (B,Sq,KV,G,H)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Layout (kernel-native): q (B, KVH, G, Sq, D), k/v (B, KVH, Skv, D).
+Positions are arange (prefill semantics); mask is causal with optional
+sliding window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, window: int = 0):
+    b, kvh, g, sq, d = q.shape
+    skv = k.shape[2]
+    scale = d ** -0.5
+    s = jnp.einsum("bkgqd,bktd->bkgqt", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)   # suffix alignment
+    kv_pos = jnp.arange(skv)[None, :]
+    dpos = q_pos - kv_pos
+    ok = dpos >= 0
+    if window:
+        ok &= dpos < window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqt,bktd->bkgqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

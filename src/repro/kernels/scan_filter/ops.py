@@ -1,0 +1,61 @@
+"""Public scan-filter API: all six predicates composed from the kernel's
+{ge, eq} primitives, with a jnp fallback and automatic interpret mode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scan_filter import kernel as K
+from repro.kernels.scan_filter import ref
+from repro.kernels.scan_filter.ref import OPS, field_masks
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_2d(words):
+    n = words.shape[0]
+    pad = (-n) % K.LANES
+    w = jnp.pad(words, (0, pad))
+    return w.reshape(-1, K.LANES), n
+
+
+def scan_filter(words, constant: int, op: str, code_bits: int,
+                block_rows: int | None = None, use_kernel: bool = True):
+    """words: (n_words,) uint32 packed codes -> (n_words,) packed mask.
+
+    Composition rules (payload max = 2^(bits-1) - 1):
+      lt = ~ge(C);  le = lt(C+1) | all-if-C==max;  gt = ge(C+1, 0-if-max);
+      ne = ~eq.
+    """
+    assert op in OPS, op
+    if not use_kernel:
+        return ref.scan_ref(words, constant, op, code_bits)
+
+    delim, _, value = field_masks(code_bits)
+    vmax = int(value)
+    w2d, n = _to_2d(jnp.asarray(words, jnp.uint32))
+    rows = w2d.shape[0]
+    br = block_rows or min(K.DEFAULT_BLOCK_ROWS, rows)
+    while rows % br:
+        br -= 1
+    run = lambda c, o: K.scan_packed(w2d, c, op=o, code_bits=code_bits,
+                                     block_rows=br, interpret=_interpret())
+    dm = jnp.uint32(delim)
+    c = int(constant)
+    if op == "ge":
+        out = run(c, "ge")
+    elif op == "lt":
+        out = ~run(c, "ge") & dm
+    elif op == "gt":
+        out = run(c + 1, "ge") if c < vmax else jnp.zeros_like(w2d)
+    elif op == "le":
+        out = (~run(c + 1, "ge") & dm if c < vmax
+               else jnp.full_like(w2d, dm))
+    elif op == "eq":
+        out = run(c, "eq")
+    else:  # ne
+        out = ~run(c, "eq") & dm
+
+    return out.reshape(-1)[:n]

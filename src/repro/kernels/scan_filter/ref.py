@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the BitWeaving-H predicate scan.
+
+Layout: `code_bits`-wide codes packed little-endian into int32 words, one
+delimiter (MSB of each field) kept 0 in the data. codes_per_word =
+32 // code_bits. A scan produces a packed mask word per data word with the
+delimiter bit of each matching field set.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+OPS = ("lt", "le", "gt", "ge", "eq", "ne")
+
+
+def codes_per_word(code_bits: int) -> int:
+    return 32 // code_bits
+
+
+def field_masks(code_bits: int):
+    """(delimiter_mask, low_mask, value_mask) as uint32 scalars."""
+    c = codes_per_word(code_bits)
+    delim = 0
+    low = 0
+    for i in range(c):
+        delim |= 1 << (i * code_bits + code_bits - 1)
+        low |= 1 << (i * code_bits)
+    value = (1 << (code_bits - 1)) - 1   # payload bits per field
+    return np.uint32(delim), np.uint32(low), np.uint32(value)
+
+
+def pack(codes, code_bits: int):
+    """codes: (N,) ints in [0, 2^(bits-1)) -> packed uint32 words
+    (N padded to a multiple of codes_per_word)."""
+    codes = np.asarray(codes, np.uint32)
+    c = codes_per_word(code_bits)
+    n = len(codes)
+    pad = (-n) % c
+    codes = np.pad(codes, (0, pad))
+    codes = codes.reshape(-1, c)
+    out = np.zeros(len(codes), np.uint32)
+    for i in range(c):
+        out |= codes[:, i] << np.uint32(i * code_bits)
+    return out
+
+
+def unpack(words, code_bits: int):
+    words = jnp.asarray(words, jnp.uint32)
+    c = codes_per_word(code_bits)
+    shifts = jnp.arange(c, dtype=jnp.uint32) * code_bits
+    vals = (words[:, None] >> shifts[None, :]) & jnp.uint32(
+        (1 << code_bits) - 1)
+    return vals.reshape(-1)
+
+
+def unpack_mask(mask_words, code_bits: int):
+    """Packed delimiter-bit mask -> boolean per code."""
+    c = codes_per_word(code_bits)
+    words = jnp.asarray(mask_words, jnp.uint32)
+    shifts = (jnp.arange(c, dtype=jnp.uint32) * code_bits + code_bits - 1)
+    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return bits.reshape(-1).astype(bool)
+
+
+def scan_ref(words, constant: int, op: str, code_bits: int):
+    """Oracle: unpack -> compare -> repack delimiter-bit mask."""
+    assert op in OPS
+    vals = unpack(words, code_bits)
+    fn = {"lt": jnp.less, "le": jnp.less_equal, "gt": jnp.greater,
+          "ge": jnp.greater_equal, "eq": jnp.equal,
+          "ne": jnp.not_equal}[op]
+    hits = fn(vals, jnp.uint32(constant))
+    c = codes_per_word(code_bits)
+    hits = hits.reshape(-1, c)
+    shifts = (jnp.arange(c, dtype=jnp.uint32) * code_bits + code_bits - 1)
+    return jnp.bitwise_or.reduce(
+        jnp.where(hits, jnp.uint32(1) << shifts[None, :], jnp.uint32(0)),
+        axis=1)

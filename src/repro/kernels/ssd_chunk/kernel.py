@@ -1,0 +1,92 @@
+"""Mamba-2 SSD chunk scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (GPU reference: Triton kernels in
+state-spaces/mamba): the sequential chunk recurrence runs as a grid over
+(batch*heads, n_chunks) with the inter-chunk state carried in VMEM scratch
+across the sequential chunk dimension — one kernel launch computes intra-
+chunk dual-form matmuls (MXU) AND the state recurrence, so the state never
+round-trips to HBM between chunks.
+
+Layout: head-major (B*H, NC, Q, ...) so each grid row owns one head's
+whole sequence; Q (chunk len) and P (head dim) are the MXU-aligned dims.
+Per-head state (N, P) = (128, 64) fits VMEM trivially.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, la_ref, b_ref, c_ref, y_ref, hout_ref,
+                h_scr, *, q: int, n: int, p: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0]                            # (Q, 1) fp32
+    la = la_ref[0, 0]                            # (Q, 1) fp32
+    b = b_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)          # (Q, N)
+
+    cum = jnp.cumsum(la, axis=0)                 # (Q, 1)
+    # intra-chunk: att[i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j, j<=i
+    seg = cum - cum.reshape(1, q)                # (Q, Q)
+    causal = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    seg = jnp.where(causal, seg, NEG_INF)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    att = cb * jnp.exp(seg) * dt.reshape(1, q)
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inbound state contribution: y += exp(cum) * (C @ H_in)
+    ch = jax.lax.dot_general(c, h_scr[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y = y + jnp.exp(cum) * ch
+
+    # state update: H_out = exp(cum_last) H_in + B^T (decay_to_end*dt*x)
+    d2e = jnp.exp(cum[q - 1, 0] - cum)           # (Q, 1)
+    bw = b * (d2e * dt)                          # (Q, N) weighted
+    s_k = jax.lax.dot_general(bw, x, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    h_scr[...] = h_scr[...] * jnp.exp(cum[q - 1, 0]) + s_k
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _():
+        hout_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(x, dt, log_a, b, c, *, interpret: bool = True):
+    """x: (BH, NC, Q, P); dt/log_a: (BH, NC, Q, 1) fp32;
+    b/c: (BH, NC, Q, N). Returns (y (BH, NC, Q, P), h_out (BH, N, P))."""
+    bh, nc, q, p = x.shape
+    n = b.shape[-1]
+    kernel = functools.partial(_ssd_kernel, q=q, n=n, p=p, nc=nc)
+    grid = (bh, nc)
+    spec = lambda last: pl.BlockSpec((1, 1, q, last),
+                                     lambda i, j: (i, j, 0, 0))
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec(p), spec(1), spec(1), spec(n), spec(n)],
+        out_specs=[spec(p),
+                   pl.BlockSpec((1, n, p), lambda i, j: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((bh, nc, q, p), x.dtype),
+                   jax.ShapeDtypeStruct((bh, n, p), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, log_a, b, c)
+    return y, hout

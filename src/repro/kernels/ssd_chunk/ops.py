@@ -1,0 +1,54 @@
+"""Public SSD-scan API: model-layout adapter over the chunk kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk import kernel as K
+from repro.kernels.ssd_chunk import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd(x, dt, a_log, b, c, chunk: int, use_kernel: bool = True):
+    """Model layout: x (B, S, H, P); dt (B, S, H) fp32 post-softplus;
+    a_log (H,); b/c (B, S, N) (groups=1, broadcast over heads).
+    Returns (y (B, S, H, P), final_state (B, H, N, P))."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    la = dt * (-jnp.exp(a_log))                     # (B, S, H)
+
+    def to_bh(t, feat):
+        # (B, S, H?, F) -> (B*H, NC, Q, F)
+        if t.ndim == 3 and t.shape[-1] == h:        # per-head scalar
+            t = jnp.moveaxis(t, -1, 1)[..., None]   # (B, H, S, 1)
+        elif t.ndim == 3:                            # shared (B, S, N)
+            t = jnp.broadcast_to(t[:, None], (bsz, h, s, t.shape[-1]))
+        else:                                        # (B, S, H, P)
+            t = jnp.moveaxis(t, 2, 1)
+        return t.reshape(bsz * h, nc, chunk, -1)
+
+    if not use_kernel:
+        ys, hs = [], []
+        for bi in range(bsz):
+            y_rows, h_rows = [], []
+            h_state = jnp.zeros((h, n, p), jnp.float32)
+            for ci in range(nc):
+                sl = slice(ci * chunk, (ci + 1) * chunk)
+                y_c, h_state = ref.ssd_chunk_ref(
+                    x[bi, sl], dt[bi, sl], la[bi, sl], b[bi, sl], c[bi, sl],
+                    h_state)
+                y_rows.append(y_c)
+            ys.append(jnp.concatenate(y_rows, axis=0))
+            hs.append(h_state)
+        return jnp.stack(ys), jnp.stack(hs)
+
+    y, hout = K.ssd_scan(to_bh(x, p), to_bh(dt, 1), to_bh(la, 1),
+                         to_bh(b, n), to_bh(c, n),
+                         interpret=_interpret())
+    y = y.reshape(bsz, h, s, p)
+    return jnp.moveaxis(y, 1, 2), hout.reshape(bsz, h, n, p)

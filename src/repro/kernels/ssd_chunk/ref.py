@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (Mamba-2 dual form).
+
+One chunk of the state-space duality computation (arXiv:2405.21060 §6):
+given per-step log-decays l = dt*A, inputs x, and B/C projections, the
+chunk-local output is a masked, decay-weighted attention-like product plus
+the inbound-state contribution:
+
+  y[i] = C_i . ( sum_{j<=i} exp(cum_i - cum_j) dt_j B_j x_j^T
+                 + exp(cum_i) H_in )
+  H_out = exp(cum_last) H_in + sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+
+This mirrors repro.models.ssm._ssd_chunked for a single chunk and is the
+ground truth for the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dt, log_a, b, c, h_in):
+    """x: (Q, H, P); dt: (Q, H) fp32; log_a: (Q, H) fp32 (= dt * A);
+    b, c: (Q, N); h_in: (H, N, P) fp32. Returns (y (Q, H, P), h_out)."""
+    q, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    cum = jnp.cumsum(log_a, axis=0)                       # (Q, H)
+
+    seg = cum[:, None, :] - cum[None, :, :]               # (Q, Q, H)
+    causal = jnp.tril(jnp.ones((q, q), bool))[:, :, None]
+    decay = jnp.where(causal, jnp.exp(jnp.where(causal, seg, -jnp.inf)), 0.0)
+    cb = jnp.einsum("in,jn->ij", c, b)                    # (Q, Q)
+    att = cb[:, :, None] * decay * dt[None, :, :]         # (Q, Q, H)
+    y_intra = jnp.einsum("ijh,jhp->ihp", att, xf)
+
+    y_inter = jnp.einsum("ih,in,hnp->ihp", jnp.exp(cum), c, h_in)
+
+    decay_to_end = jnp.exp(cum[-1][None] - cum)           # (Q, H)
+    s_k = jnp.einsum("jh,jn,jhp->hnp", decay_to_end * dt, b, xf)
+    h_out = h_in * jnp.exp(cum[-1])[:, None, None] + s_k
+    return (y_intra + y_inter).astype(x.dtype), h_out

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces (artifacts/dryrun/<mesh>/<arch>__<shape>.json):
+  - proof of compilation on the production mesh (the deliverable),
+  - memory_analysis (bytes per device: arguments/outputs/temps),
+  - loop-correct cost measurements via two small unrolled probe compiles
+    extrapolated to the full depth (see repro.core.roofline),
+  - the collective schedule (op kinds, counts, ring bytes),
+  - the three roofline terms + dominant bottleneck + MODEL_FLOPS ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-1.3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, ARCH_IDS, cell_applicable, get_config
+from repro.core import hlo as hlolib
+from repro.core import roofline, traffic
+from repro.dist import strategies
+from repro.launch import specs
+from repro.launch.mesh import make_production_mesh
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _probe_cfg(cfg, layers: int):
+    """Unrolled, loop-free variant for loop-correct cost measurement."""
+    return dataclasses.replace(cfg, num_layers=layers, scan_layers=False,
+                               attn_impl="naive", fused_ce=False,
+                               remat="none")
+
+
+def _costs(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    coll = hlolib.collective_summary(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "ring_bytes": float(coll["total_ring_bytes"]),
+        "collective_count": float(coll["total_count"]),
+    }
+
+
+def _memory(compiled) -> dict:
+    m = compiled.memory_analysis()
+    if m is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: int(getattr(m, k, 0)) for k in keys}
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             *, probes: bool = True, cfg_override=None,
+             strategy: str | None = None) -> dict:
+    cfg = cfg_override or get_config(arch_id)
+    shape = SHAPES[shape_name]
+    rules_extra, cfg, strat_name = strategies.strategy_for(
+        cfg, shape, strategy or "megatron")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec: dict = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": int(chips), "kind": shape.kind,
+        "strategy": strat_name,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped-by-design"
+        rec["why"] = why
+        return rec
+
+    # --- full-scale compile (the runnability proof) -----------------------
+    t0 = time.time()
+    jitted, abstract = specs.build_step(cfg, shape, mesh,
+                                        rules_extra=rules_extra)
+    lowered = jitted.lower(*abstract)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["memory"] = _memory(compiled)
+    full_coll = hlolib.collective_summary(compiled.as_text())
+    rec["collective_schedule"] = full_coll["ops"]
+    rec["status"] = "ok"
+
+    # --- loop-correct cost probes -----------------------------------------
+    if probes:
+        p = len(cfg.block_pattern)
+        cost_p = _costs(_compile_probe(cfg, shape, mesh, p, rules_extra))
+        cost_2p = _costs(_compile_probe(cfg, shape, mesh, 2 * p,
+                                        rules_extra))
+        est = roofline.extrapolate(cost_p, cost_2p, cfg.num_layers, p)
+        rec["probe_costs"] = {"p": cost_p, "2p": cost_2p, "est_full": est}
+
+        # analytic TPU-faithful memory/collective terms (primary; the CPU
+        # backend inflates bf16 byte counts — see core/traffic.py docstring)
+        mshape = traffic.MeshShape.production(multi_pod)
+        hbm = traffic.hbm_traffic(cfg, shape, mshape, strat_name)
+        coll = traffic.collective_traffic(cfg, shape, mshape, strat_name)
+        rec["analytic_hbm"] = hbm
+        rec["analytic_collective"] = coll
+
+        terms = roofline.terms(est["flops"], hbm["total"], coll["total"])
+        rec["roofline"] = terms.to_dict()
+        cpu_terms = roofline.terms(est["flops"], est["bytes"],
+                                   est["ring_bytes"])
+        rec["roofline_cpu_measured"] = cpu_terms.to_dict()
+        mf = roofline.model_flops(cfg, shape)
+        rec["utilization"] = roofline.utilization(terms, mf, chips)
+    return rec
+
+
+def _compile_probe(cfg, shape, mesh, layers: int, rules_extra=None):
+    pc = _probe_cfg(cfg, layers)
+    jitted, abstract = specs.build_step(pc, shape, mesh,
+                                        rules_extra=rules_extra)
+    return jitted.lower(*abstract).compile()
+
+
+def cell_path(arch_id, shape_name, mesh_name, opt: bool = False) -> Path:
+    d = ART / (f"{mesh_name}-opt" if opt else mesh_name)
+    d.mkdir(parents=True, exist_ok=True)
+    return d / f"{arch_id}__{shape_name}.json"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="use the hillclimbed strategy per cell "
+                         "(repro.dist.strategies.OPTIMIZED); results go to "
+                         "artifacts/dryrun/<mesh>-opt/")
+    ap.add_argument("--strategy", choices=tuple(strategies.STRATEGIES),
+                    help="force one strategy for every requested cell")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.all or not args.arch else (args.arch,)
+    shapes = tuple(SHAPES) if args.all or not args.shape else (args.shape,)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    failures = []
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                opt = args.opt or bool(args.strategy)
+                strategy = args.strategy
+                if args.opt and not strategy:
+                    strategy = strategies.OPTIMIZED.get((arch, shape))
+                    if strategy is None:
+                        continue   # --opt touches only hillclimbed cells
+                path = cell_path(arch, shape, mesh_name, opt=opt)
+                if path.exists() and not args.force:
+                    print(f"[skip] {mesh_name}/{arch}/{shape} (cached)")
+                    continue
+                print(f"[run ] {mesh_name}/{arch}/{shape} "
+                      f"strategy={strategy or 'megatron'} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_name == "multi",
+                                   probes=not args.no_probes,
+                                   strategy=strategy)
+                except Exception as e:  # record, keep going
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures.append((mesh_name, arch, shape, repr(e)))
+                path.write_text(json.dumps(rec, indent=1, default=str))
+                print(f"[done] {mesh_name}/{arch}/{shape}: {rec['status']}"
+                      + (f" compile={rec.get('compile_s')}s" if
+                         rec.get("compile_s") else ""), flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        raise SystemExit(1)
+    print("\nall requested cells ok")
+
+
+if __name__ == "__main__":
+    main()

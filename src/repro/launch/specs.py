@@ -1,0 +1,189 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings for every step kind.
+
+This is the no-allocation layer the dry-run builds on: every model input,
+train state, and decode cache is described by eval_shape and mapped to
+NamedShardings through the logical-axis rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist import sharding as shlib
+from repro.models import lm
+from repro.models.common import dtype_of
+from repro.serve import engine
+from repro.train import optim, step as train_step_lib
+
+
+def rules_for(cfg: ArchConfig, shape: ShapeSpec,
+              extra: dict | None = None) -> dict:
+    """Per-cell logical-axis rule overrides (see DESIGN.md §4).
+
+    `extra` (a strategy's overrides, repro.dist.strategies) wins last.
+    """
+    rules: dict = {}
+    # FSDP over data (+pod when present) — needed to fit >=100B optimizer
+    # state; harmless elsewhere.
+    rules["embed"] = ("data", "pod")
+    if shape.name == "long_500k":
+        # batch=1: the data axis is useless for batch; use it for split-K
+        # over the KV ring / sequence instead.
+        rules["batch"] = None
+        rules["kv_seq"] = ("data", "model")
+    rules.update(extra or {})
+    return rules
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Training batch abstract values + logical axes."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        in_axes = "batch seq"
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                      dtype_of(cfg.dtype))
+        in_axes = "batch seq act_embed"
+    return ({"inputs": inputs,
+             "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)},
+            {"inputs": in_axes, "labels": "batch seq"})
+
+
+def state_specs(cfg: ArchConfig, opt_cfg: optim.AdamWConfig):
+    key = jax.random.PRNGKey(0)
+    captured = {}
+
+    def f(k):
+        st, ax = train_step_lib.init_state(k, cfg, opt_cfg)
+        captured["axes"] = ax
+        return st
+
+    state = jax.eval_shape(f, key)
+    return state, captured["axes"]
+
+
+def params_specs(cfg: ArchConfig):
+    captured = {}
+
+    def f(k):
+        p, a = lm.init(k, cfg)
+        captured["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, captured["axes"]
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    captured = {}
+
+    def f():
+        c, a = lm.init_caches(cfg, batch, max_len, dtype_of(cfg.dtype))
+        captured["axes"] = a
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, captured["axes"]
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    b = shape.global_batch
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        in_axes = "batch seq"
+    else:
+        inputs = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dtype_of(cfg.dtype))
+        in_axes = "batch seq act_embed"
+    return inputs, in_axes
+
+
+def shardings(tree, axes, mesh, rules):
+    return shlib.sharding_tree(tree, axes, mesh, rules)
+
+
+def replicated(mesh):
+    from jax.sharding import PartitionSpec as P
+    return NamedSharding(mesh, P())
+
+
+# --------------------------------------------------------------------------
+# step builders used by dryrun / train / serve launchers
+# --------------------------------------------------------------------------
+
+def build_train(cfg, shape, mesh, opt_cfg=None, num_microbatches: int = 1,
+                rules_extra: dict | None = None):
+    """Returns (jitted_fn, abstract_args) for train_step(state, batch)."""
+    opt_cfg = opt_cfg or optim.AdamWConfig()
+    rules = rules_for(cfg, shape, rules_extra)
+    state, state_axes = state_specs(cfg, opt_cfg)
+    batch, batch_axes = batch_specs(cfg, shape)
+    state_sh = shardings(state, state_axes, mesh, rules)
+    batch_sh = shardings(batch, batch_axes, mesh, rules)
+    fn = train_step_lib.make_train_step(cfg, opt_cfg, num_microbatches)
+
+    def wrapped(state, batch):
+        with shlib.use_rules(mesh, rules):
+            return fn(state, batch)
+
+    jitted = jax.jit(wrapped, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    return jitted, (state, batch)
+
+
+def build_prefill(cfg, shape, mesh, rules_extra: dict | None = None):
+    """prefill_step(params, inputs, caches) -> (last logits, caches)."""
+    rules = rules_for(cfg, shape, rules_extra)
+    b, s = shape.global_batch, shape.seq_len
+    params, p_axes = params_specs(cfg)
+    caches, c_axes = cache_specs(cfg, b, s)
+    batch, batch_axes = batch_specs(cfg, shape)
+    p_sh = shardings(params, p_axes, mesh, rules)
+    c_sh = shardings(caches, c_axes, mesh, rules)
+    in_sh = shardings(batch["inputs"], batch_axes["inputs"], mesh, rules)
+    fn = engine.make_prefill_step(cfg)
+
+    def wrapped(params, inputs, caches):
+        with shlib.use_rules(mesh, rules):
+            return fn(params, inputs, caches)
+
+    jitted = jax.jit(wrapped, in_shardings=(p_sh, in_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(2,))
+    return jitted, (params, batch["inputs"], caches)
+
+
+def build_serve(cfg, shape, mesh, rules_extra: dict | None = None):
+    """serve_step(params, inputs, cache_len, caches, key)."""
+    rules = rules_for(cfg, shape, rules_extra)
+    b, s = shape.global_batch, shape.seq_len
+    params, p_axes = params_specs(cfg)
+    caches, c_axes = cache_specs(cfg, b, s)
+    inputs, in_axes = decode_input_specs(cfg, shape)
+    p_sh = shardings(params, p_axes, mesh, rules)
+    c_sh = shardings(caches, c_axes, mesh, rules)
+    in_sh = shardings(inputs, in_axes, mesh, rules)
+    len_sh = shardings(jax.ShapeDtypeStruct((b,), jnp.int32), "batch",
+                       mesh, rules)
+    fn = engine.make_serve_step(cfg)
+
+    def wrapped(params, inputs, cache_len, caches, key):
+        with shlib.use_rules(mesh, rules):
+            return fn(params, inputs, cache_len, caches, key)
+
+    jitted = jax.jit(wrapped,
+                     in_shardings=(p_sh, in_sh, len_sh, c_sh, replicated(mesh)),
+                     out_shardings=(None, None, c_sh), donate_argnums=(3,))
+    abstract = (params, inputs,
+                jax.ShapeDtypeStruct((b,), jnp.int32), caches,
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return jitted, abstract
+
+
+def build_step(cfg, shape, mesh, rules_extra: dict | None = None, **kw):
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, rules_extra=rules_extra, **kw)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, rules_extra=rules_extra)
+    return build_serve(cfg, shape, mesh, rules_extra=rules_extra)

@@ -1,0 +1,1 @@
+"""Model zoo: functional layers, blocks, and the causal LM assembly."""

@@ -1,0 +1,199 @@
+"""GQA attention: full/causal, sliding-window, and KV-cache decode paths.
+
+Three implementations share one math definition (tests assert equivalence):
+- "naive": materializes (B, H, S, T) scores — reference & small shapes.
+- "blockwise": lax.scan over KV blocks with online softmax (flash-style in
+  pure JAX) — the train/prefill default at large S.
+- Pallas flash kernel (repro.kernels.flash_attention) — TPU-optimized path,
+  selected via attn_impl="flash" (interpret mode off-TPU).
+
+Decode caches are ring buffers {k, v, pos}: slot = position % size, with the
+stored-position plane driving the causal/window mask (slots never written
+hold pos = +INF_POS and are therefore masked). Full-attention caches size the
+ring to max_len so nothing is ever evicted; sliding-window caches size it to
+the window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical_constraint
+from repro.models.common import apply_rope, dense_init
+
+NEG_INF = -1e30
+INF_POS = 1 << 30    # "never written" marker in the pos plane
+
+
+def init(key, cfg, dtype):
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (cfg.d_model, cfg.num_heads, hd),
+                         ("embed", "heads", "head_dim"), dtype),
+        "wk": dense_init(kk, (cfg.d_model, cfg.num_kv_heads, hd),
+                         ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": dense_init(kv, (cfg.d_model, cfg.num_kv_heads, hd),
+                         ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": dense_init(ko, (cfg.num_heads, hd, cfg.d_model),
+                         ("heads", "head_dim", "embed"), dtype,
+                         scale=1.0 / (hd * cfg.num_heads) ** 0.5),
+    }
+
+
+def _mask(q_pos, kv_pos, window: int):
+    """(B, Sq, Skv) additive mask: causal, optionally sliding-window."""
+    d = q_pos[:, :, None] - kv_pos[:, None, :]
+    ok = d >= 0
+    if window:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,Kv,G,H), k: (B,Skv,Kv,H) -> (B,Kv,G,Sq,Skv) fp32 scores."""
+    return jnp.einsum("bskgh,btkh->bkgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _naive(q, k, v, q_pos, kv_pos, window):
+    scale = q.shape[-1] ** -0.5
+    s = _gqa_scores(q * scale, k)
+    s = s + _mask(q_pos, kv_pos, window)[:, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+
+
+def _blockwise(q, k, v, q_pos, kv_pos, window, block_kv: int = 1024):
+    """Online-softmax over KV blocks; O(Sq * block) live memory."""
+    b, skv = k.shape[0], k.shape[1]
+    block_kv = min(block_kv, skv)
+    assert skv % block_kv == 0, (skv, block_kv)
+    nblk = skv // block_kv
+    scale = q.shape[-1] ** -0.5
+    qs = q * scale
+
+    kb = jnp.moveaxis(k.reshape(b, nblk, block_kv, *k.shape[2:]), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nblk, block_kv, *v.shape[2:]), 1, 0)
+    pb = jnp.moveaxis(kv_pos.reshape(b, nblk, block_kv), 1, 0)
+
+    acc0 = jnp.zeros(q.shape, jnp.float32)
+    m0 = jnp.full(q.shape[:-1], NEG_INF, jnp.float32)
+    l0 = jnp.zeros(q.shape[:-1], jnp.float32)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kc, vc, pc = blk
+        s = _gqa_scores(qs, kc)                              # (B,Kv,G,Sq,Bk)
+        s = s + _mask(q_pos, pc, window)[:, None, None]
+        s = jnp.moveaxis(s, 3, 1)                            # (B,Sq,Kv,G,Bk)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        upd = jnp.einsum("bskgt,btkh->bskgh", p.astype(vc.dtype), vc)
+        acc_new = acc * alpha[..., None] + upd.astype(jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    (acc, _, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kb, vb, pb))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def _run(q, k, v, q_pos, kv_pos, window, impl):
+    sq, skv = q.shape[1], k.shape[1]
+    if impl == "auto":
+        impl = "naive" if sq * skv <= 1024 * 1024 else "blockwise"
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention(q, k, v, q_pos, kv_pos, window=window)
+    if impl == "blockwise":
+        return _blockwise(q, k, v, q_pos, kv_pos, window)
+    return _naive(q, k, v, q_pos, kv_pos, window)
+
+
+def attend(params, x, positions, cfg, *, window: int = 0, impl: str = "auto",
+           kv_cache=None, cache_len=None):
+    """Unified attention.
+
+    - full/prefill: kv_cache None — self-attention over x; if x is a prefill
+      segment, the produced K/V are written into a fresh cache by the caller
+      via `fill_cache`. Returns (out, (k, v)).
+    - decode: kv_cache = ring buffer dict; positions (B, Sq) absolute.
+      Returns (out, new_cache).
+    """
+    b, sq, _ = x.shape
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    group = cfg.num_heads // kvh
+
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(b, sq, kvh, group, hd)
+    # context-parallel hooks: "cp_seq"/"kv_full" are absent from the default
+    # rules (-> UNCONSTRAINED no-ops); the cp strategy defines them so q
+    # stays seq-sharded while K/V replicate over the model axis — the
+    # TP-equivalent for head counts indivisible by |model| (DESIGN.md §4).
+    q = logical_constraint(q, (None, "cp_seq", None, None, None))
+    k = logical_constraint(k, (None, "kv_full", None, None))
+    v = logical_constraint(v, (None, "kv_full", None, None))
+
+    if kv_cache is None or sq > 1:
+        # train / prefill: attend over the segment's own K/V (head-sharded);
+        # the cache (seq-sharded ring) is written out-of-band so no
+        # head<->seq reshard lands in the attention hot path.
+        o = _run(q, k, v, positions, positions, window, impl)
+        out = jnp.einsum("bsnh,nhd->bsd",
+                         o.reshape(b, sq, cfg.num_heads, hd).astype(x.dtype),
+                         params["wo"])
+        new_cache = (fill_cache(kv_cache, k, v, positions)
+                     if kv_cache is not None else (k, v))
+        return out, new_cache
+
+    new_cache = fill_cache(kv_cache, k, v, positions)
+    if impl == "flash":
+        # one-token decode goes to the split-K Pallas kernel (ring-buffer
+        # aware via the stored-pos plane)
+        from repro.kernels.decode_attention import ops as dec_ops
+        o = dec_ops.decode_attention(
+            q[:, 0], new_cache["k"], new_cache["v"], positions[:, 0],
+            new_cache["pos"], window=window)[:, None]   # (B,1,KV,G,H)
+        out = jnp.einsum("bsnh,nhd->bsd",
+                         o.reshape(b, sq, cfg.num_heads, hd).astype(x.dtype),
+                         params["wo"])
+        return out, new_cache
+    o = _run(q, new_cache["k"], new_cache["v"], positions, new_cache["pos"],
+             window, impl)
+    out = jnp.einsum("bsnh,nhd->bsd",
+                     o.reshape(b, sq, cfg.num_heads, hd).astype(x.dtype),
+                     params["wo"])
+    return out, new_cache
+
+
+def fill_cache(cache, k, v, positions):
+    """Write K/V at ring slots position %% size (last-size slice if the
+    segment is longer than the ring)."""
+    size = cache["k"].shape[1]
+    if k.shape[1] > size:
+        k, v, positions = k[:, -size:], v[:, -size:], positions[:, -size:]
+    b = k.shape[0]
+    slots = positions % size
+    bidx = jnp.arange(b)[:, None]
+    return {
+        "k": cache["k"].at[bidx, slots].set(k),
+        "v": cache["v"].at[bidx, slots].set(v),
+        "pos": cache["pos"].at[bidx, slots].set(positions),
+    }
+
+
+def init_cache(cfg, batch: int, size: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (batch, size, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.full((batch, size), INF_POS, jnp.int32)}
+
+
+CACHE_AXES = {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+              "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+              "pos": ("batch", "kv_seq")}

@@ -1,0 +1,96 @@
+"""Residual decoder blocks: norm -> mixer -> residual [-> norm -> ffn/moe].
+
+Block kinds: "attn" (full causal), "swa" (sliding window), "ssd" (Mamba-2),
+"rglru" (Griffin recurrent). SSD blocks have no separate FFN (the mixer is
+the whole block, d_ff == 0 for pure-SSM archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical_constraint
+from repro.models import attention, mlp, moe, rglru, ssm
+from repro.models.common import rms_norm, zeros_init
+
+
+def has_ffn(cfg, kind: str) -> bool:
+    return cfg.d_ff > 0 and kind != "ssd"
+
+
+def block_init(key, cfg, kind: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": zeros_init((cfg.d_model,), ("embed",), jnp.float32)}
+    if kind in ("attn", "swa"):
+        p["mixer"] = attention.init(k1, cfg, dtype)
+    elif kind == "ssd":
+        p["mixer"] = ssm.init(k1, cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = rglru.init(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if has_ffn(cfg, kind):
+        p["norm2"] = zeros_init((cfg.d_model,), ("embed",), jnp.float32)
+        if cfg.num_experts:
+            p["moe"] = moe.init(k2, cfg, dtype)
+        else:
+            p["ffn"] = mlp.init(k2, cfg, dtype)
+    return p
+
+
+def block_apply(params, x, positions, cfg, kind: str, *,
+                cache=None, cache_len=None, decode: bool = False):
+    """Returns (x, new_cache, aux_loss)."""
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    window = cfg.window if kind == "swa" else 0
+    if kind in ("attn", "swa"):
+        out, new_cache = attention.attend(
+            params["mixer"], h, positions, cfg, window=window,
+            impl=getattr(cfg, "attn_impl", "auto"), kv_cache=cache)
+    elif kind == "ssd":
+        fn = ssm.decode_step if decode else ssm.apply
+        out, new_cache = fn(params["mixer"], h, cfg, cache)
+    elif kind == "rglru":
+        fn = rglru.decode_step if decode else rglru.apply
+        out, new_cache = fn(params["mixer"], h, cfg, cache)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    x = logical_constraint(x, ("batch", "seq", "embed"))
+
+    aux_loss = jnp.zeros((), jnp.float32)
+    if has_ffn(cfg, kind):
+        h = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if cfg.num_experts:
+            out, aux = moe.apply(params["moe"], h, cfg)
+            aux_loss = aux["aux_loss"]
+        else:
+            out = mlp.apply(params["ffn"], h)
+        x = x + out
+        x = logical_constraint(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux_loss
+
+
+def block_cache_init(cfg, kind: str, batch: int, max_len: int, dtype):
+    """Decode cache for one block. Attention caches are ring buffers of
+    size min(window, max_len) with a stored-position plane for masking."""
+    if kind in ("attn", "swa"):
+        size = min(cfg.window, max_len) if kind == "swa" else max_len
+        return attention.init_cache(cfg, batch, size, dtype)
+    if kind == "ssd":
+        return ssm.init_state(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru.init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_cache_axes(kind: str):
+    if kind in ("attn", "swa"):
+        ax = dict(attention.CACHE_AXES)
+        ax["pos"] = ("batch", "kv_seq")
+        return ax
+    if kind == "ssd":
+        return ssm.STATE_AXES
+    if kind == "rglru":
+        return rglru.STATE_AXES
+    raise ValueError(kind)

@@ -1,0 +1,147 @@
+"""Shared model building blocks (functional style, params = pytrees).
+
+Every init function returns `(params, axes)` where `axes` is a pytree of the
+same structure holding logical-axis-name tuples for each array. The sharding
+layer (`repro.dist.sharding`) maps logical names -> mesh axes, so models never
+mention the mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------
+# parameter initialization
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, axes, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init; returns (array, logical axes)."""
+    fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+    return w.astype(dtype), axes
+
+
+def zeros_init(shape, axes, dtype):
+    return jnp.zeros(shape, dtype), axes
+
+
+def ones_init(shape, axes, dtype):
+    return jnp.ones(shape, dtype), axes
+
+
+def axes_str(names) -> str:
+    """Logical axes tuple -> a single string leaf ('embed heads'; '_' = None).
+
+    Strings are pytree leaves, so axes trees mirror param trees exactly.
+    """
+    if isinstance(names, str):
+        return names
+    return " ".join(n if n else "_" for n in names) or "_scalar_"
+
+
+def axes_names(s):
+    """Inverse of axes_str -> list[str | None]."""
+    if not isinstance(s, str):
+        return list(s)
+    if s == "_scalar_":
+        return []
+    return [None if n == "_" else n for n in s.split()]
+
+
+def _is_param_axes_pair(x):
+    return (isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+            and not hasattr(x[1], "dtype"))
+
+
+def split_tree(params_and_axes):
+    """{'w': (arr, ax), ...} (possibly nested) -> (params, axes) twin trees.
+
+    Axes leaves are encoded as strings (see axes_str)."""
+    params = jax.tree.map(lambda pa: pa[0], params_and_axes,
+                          is_leaf=_is_param_axes_pair)
+    axes = jax.tree.map(lambda pa: axes_str(pa[1]), params_and_axes,
+                        is_leaf=_is_param_axes_pair)
+    return params, axes
+
+
+def map_axes_tree(axes_tree):
+    """Tree whose leaves are tuples of names -> tree of axes_str leaves."""
+    is_names = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(axes_str, axes_tree, is_leaf=is_names)
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float):
+    """RMSNorm in fp32 accumulation, output in input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits, labels):
+    """Mean next-token CE; logits (B, S, V) any float dtype, labels (B, S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_cross_entropy(x, head_w, labels, num_chunks: int = 8):
+    """CE computed seq-chunk-wise so (B, S, V) logits never materialize.
+
+    Beyond-paper memory optimization (§Perf): reduces the HBM term for large
+    vocabularies by num_chunks.
+    """
+    b, s, _ = x.shape
+    assert s % num_chunks == 0, (s, num_chunks)
+    xs = x.reshape(b, num_chunks, s // num_chunks, x.shape[-1])
+    ls = labels.reshape(b, num_chunks, s // num_chunks)
+
+    def one(chunk):
+        xc, lc = chunk
+        logits = jnp.einsum("bsd,dv->bsv", xc, head_w)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    total = jax.lax.map(one, (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(ls, 1, 0)))
+    return jnp.sum(total) / (b * s)

@@ -1,0 +1,217 @@
+"""Causal LM assembly: embeddings -> block stack (lax.scan) -> head.
+
+Stacks are scanned over layers so HLO size is O(1 layer) even for
+llama3-405b's 126 layers; patterned stacks (recurrentgemma's R,R,A cycle)
+scan over pattern groups with an unrolled tail. Caches thread through the
+scan as per-layer xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical_constraint
+from repro.models import blocks
+from repro.models.common import (axes_str, dense_init, dtype_of,
+                                 map_axes_tree, rms_norm, split_tree,
+                                 zeros_init)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _prepend_axis(axes_tree, name: str):
+    return jax.tree.map(
+        lambda s: axes_str([name] + [n or "_" for n in
+                                     (s.split() if s != "_scalar_" else [])]),
+        axes_tree)
+
+
+def _stacked_block_init(key, cfg, kind: str, n: int, dtype):
+    """n same-kind blocks with stacked (n, ...) params. Returns (params, axes)."""
+    keys = jax.random.split(key, n)
+    captured = {}
+
+    def params_only(k):
+        p, a = split_tree(blocks.block_init(k, cfg, kind, dtype))
+        captured["axes"] = a          # static; recorded during tracing
+        return p
+
+    jax.eval_shape(params_only, keys[0])
+    stacked = jax.vmap(params_only)(keys)
+    return stacked, _prepend_axis(captured["axes"], "layers")
+
+
+def init(key, cfg):
+    """Returns (params, axes) twin pytrees (axes leaves are strings)."""
+    dtype = dtype_of(cfg.dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    p = len(cfg.block_pattern)
+    n_groups, tail = divmod(cfg.num_layers, p)
+
+    pa = {}
+    ax = {}
+    if cfg.input_mode == "tokens":
+        pa["embed"], ax["embed"] = dense_init(
+            k_embed, (cfg.vocab_size, cfg.d_model), None, dtype, scale=0.02)
+        ax["embed"] = axes_str(("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        pa["lm_head"], ax["lm_head"] = dense_init(
+            k_head, (cfg.d_model, cfg.vocab_size), None, dtype)
+        ax["lm_head"] = axes_str(("embed", "vocab"))
+    pa["final_norm"], _ = zeros_init((cfg.d_model,), None, jnp.float32)
+    ax["final_norm"] = axes_str(("embed",))
+
+    bkeys = jax.random.split(k_blocks, p + max(tail, 1))
+    groups, gaxes = [], []
+    for i, kind in enumerate(cfg.block_pattern):
+        g, a = _stacked_block_init(bkeys[i], cfg, kind, n_groups, dtype)
+        groups.append(g)
+        gaxes.append(a)
+    pa["groups"], ax["groups"] = tuple(groups), tuple(gaxes)
+    tails, taxes = [], []
+    for j in range(tail):
+        kind = cfg.block_pattern[j]
+        t = blocks.block_init(bkeys[p + j], cfg, kind, dtype)
+        tp, ta = split_tree(t)
+        tails.append(tp)
+        taxes.append(ta)
+    pa["tail"], ax["tail"] = tuple(tails), tuple(taxes)
+    return pa, ax
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, max_len: int, dtype=None):
+    """Decode caches mirroring the block structure. Returns (caches, axes)."""
+    dtype = dtype or dtype_of(cfg.dtype)
+    p = len(cfg.block_pattern)
+    n_groups, tail = divmod(cfg.num_layers, p)
+
+    def one(kind):
+        c = blocks.block_cache_init(cfg, kind, batch, max_len, dtype)
+        a = map_axes_tree(blocks.block_cache_axes(kind))
+        return c, a
+
+    groups, gaxes = [], []
+    for kind in cfg.block_pattern:
+        c, a = one(kind)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), c)
+        groups.append(stacked)
+        gaxes.append(_prepend_axis(a, "layers"))
+    tails, taxes = [], []
+    for j in range(tail):
+        c, a = one(cfg.block_pattern[j])
+        tails.append(c)
+        taxes.append(a)
+    return ({"groups": tuple(groups), "tail": tuple(tails)},
+            {"groups": tuple(gaxes), "tail": tuple(taxes)})
+
+
+# --------------------------------------------------------------------------
+# apply
+# --------------------------------------------------------------------------
+
+def _block_fn(cfg, kind, positions, decode):
+    def f(x, bp, c):
+        return blocks.block_apply(bp, x, positions, cfg, kind,
+                                  cache=c, decode=decode)
+    if cfg.remat != "none" and not decode:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        f = jax.checkpoint(f, policy=policy)
+    return f
+
+
+def _stack_apply(params, cfg, x, positions, caches, decode):
+    p = len(cfg.block_pattern)
+    fns = [_block_fn(cfg, k, positions, decode) for k in cfg.block_pattern]
+    cg = caches["groups"] if caches else tuple([None] * p)
+    n_groups = cfg.num_layers // p
+
+    def body(carry, xs):
+        x, aux = carry
+        bps, cs = xs
+        new_cs = []
+        for i in range(p):
+            x, nc, a = fns[i](x, bps[i], cs[i] if caches else None)
+            new_cs.append(nc)
+            aux = aux + a
+        return (x, aux), tuple(new_cs) if caches else None
+
+    if cfg.scan_layers and n_groups > 0:
+        (x, aux), new_groups = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["groups"], cg))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        new_parts = []
+        for g in range(n_groups):
+            take = jax.tree.map(lambda a: a[g], (params["groups"], cg))
+            (x, aux), nc = body((x, aux), take)
+            new_parts.append(nc)
+        new_groups = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_parts)
+                      if (caches and new_parts) else None)
+
+    new_tail = []
+    for j, tp in enumerate(params["tail"]):
+        kind = cfg.block_pattern[j]
+        c = caches["tail"][j] if caches else None
+        x, nc, a = _block_fn(cfg, kind, positions, decode)(x, tp, c)
+        new_tail.append(nc)
+        aux = aux + a
+    new_caches = ({"groups": new_groups, "tail": tuple(new_tail)}
+                  if caches else None)
+    return x, new_caches, aux
+
+
+def head_logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def apply(params, cfg, inputs, positions, caches=None, decode=False,
+          return_hidden=False):
+    """inputs: (B, S) int tokens or (B, S, D) embeddings (per input_mode).
+
+    Returns (logits_or_hidden, new_caches, aux_loss).
+    """
+    if cfg.input_mode == "tokens":
+        x = params["embed"][inputs]
+    else:
+        x = inputs.astype(dtype_of(cfg.dtype))
+    x = logical_constraint(x, ("batch", "seq", "act_embed"))
+    x, new_caches, aux = _stack_apply(params, cfg, x, positions, caches,
+                                      decode)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, new_caches, aux
+    return head_logits(params, cfg, x), new_caches, aux
+
+
+def decode_step(params, cfg, inputs, cache_len, caches):
+    """One-token decode. inputs: (B, 1) tokens or (B, 1, D) embeddings;
+    cache_len: (B,) int32 tokens already in cache."""
+    positions = cache_len[:, None].astype(jnp.int32)
+    return apply(params, cfg, inputs, positions, caches=caches, decode=True)
+
+
+def prefill(params, cfg, inputs, caches, return_hidden=False):
+    """Full-segment prefill that fills decode caches."""
+    b = inputs.shape[0]
+    s = inputs.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return apply(params, cfg, inputs, positions, caches=caches, decode=False,
+                 return_hidden=return_hidden)

@@ -1,0 +1,23 @@
+"""SwiGLU feed-forward block (LLaMA-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init(key, cfg, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(kg, (cfg.d_model, cfg.d_ff), ("embed", "mlp"), dtype),
+        "w_up": dense_init(ku, (cfg.d_model, cfg.d_ff), ("embed", "mlp"), dtype),
+        "w_down": dense_init(kd, (cfg.d_ff, cfg.d_model), ("mlp", "embed"), dtype),
+    }
+
+
+def apply(params, x):
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

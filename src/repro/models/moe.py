@@ -1,0 +1,119 @@
+"""Top-k routed mixture-of-experts FFN (GShard-style fixed capacity).
+
+Dispatch is index-based (gather -> expert GEMM -> scatter-add) rather than
+one-hot-matmul based, so no (tokens, experts, capacity) dispatch tensor is
+ever materialized; capacity overflow drops tokens (they pass through the
+residual only), underflow pads with zero-weight slots.
+
+Routing modes:
+- softmax top-k with renormalization (Mixtral) + Switch-style aux loss.
+- aux-loss-free: sigmoid scores + a selection-only bias updated outside the
+  gradient from expert load (DeepSeek-V3 / Moonlight style) — see
+  `bias_update` and its use in repro.train.step.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, zeros_init
+
+
+def init(key, cfg, dtype):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": dense_init(kr, (d, e), ("embed", "experts"), dtype=jnp.float32),
+        "w_gate": dense_init(kg, (e, d, f), ("experts", "embed", "expert_mlp"), dtype),
+        "w_up": dense_init(ku, (e, d, f), ("experts", "embed", "expert_mlp"), dtype),
+        "w_down": dense_init(kd, (e, f, d), ("experts", "expert_mlp", "embed"), dtype),
+    }
+    if cfg.aux_free_bias:
+        p["router_bias"] = zeros_init((e,), ("experts",), jnp.float32)
+    return p
+
+
+def capacity(cfg, seq_len: int) -> int:
+    c = math.ceil(seq_len * cfg.experts_per_token / cfg.num_experts
+                  * cfg.moe_capacity_factor)
+    return max(cfg.experts_per_token, min(c, seq_len))
+
+
+def _route(params, x, cfg):
+    """x: (S, D) -> top-k (idx (S,k), weights (S,k) fp32, probs (S,E))."""
+    logits = jnp.einsum("sd,de->se", x.astype(jnp.float32), params["router"])
+    k = cfg.experts_per_token
+    if cfg.aux_free_bias:
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"][None, :]
+        _, idx = jax.lax.top_k(sel, k)
+        w = jnp.take_along_axis(scores, idx, axis=1)
+        w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(jnp.sum(scores, 1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, k)
+        w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+    return idx, w, probs
+
+
+def _dispatch_indices(idx, w, num_experts: int, cap: int):
+    """Build (E, C) token indices + weights from per-token top-k choices.
+
+    idx/w: (S, k). Returns token_for (E, C) int32 (0 where empty),
+    weight_for (E, C) fp32 (0 where empty/dropped).
+    """
+    s, k = idx.shape
+    flat_e = idx.reshape(-1)                       # (S*k,) expert ids
+    flat_w = w.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+    # rank of each slot within its expert = #earlier slots with same expert
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)  # (S*k, E)
+    rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                               flat_e[:, None], axis=1)[:, 0]
+    keep = rank < cap
+    dest = flat_e * cap + jnp.where(keep, rank, cap * num_experts)  # OOB drops
+    token_for = jnp.zeros(num_experts * cap + 1, jnp.int32).at[dest].set(
+        flat_t, mode="drop")[:-1].reshape(num_experts, cap)
+    weight_for = jnp.zeros(num_experts * cap + 1, jnp.float32).at[dest].set(
+        jnp.where(keep, flat_w, 0.0), mode="drop")[:-1].reshape(num_experts, cap)
+    return token_for, weight_for
+
+
+def _apply_row(params, x, cfg, cap):
+    """x: (S, D) single batch row."""
+    idx, w, probs = _route(params, x, cfg)
+    token_for, weight_for = _dispatch_indices(idx, w, cfg.num_experts, cap)
+    xe = x[token_for]                                        # (E, C, D) gather
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    y = y * weight_for[..., None].astype(y.dtype)
+    out = jnp.zeros_like(x).at[token_for.reshape(-1)].add(
+        y.reshape(-1, x.shape[-1]))
+    # routing stats for aux loss / bias update
+    load = jnp.mean(jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32),
+                    axis=(0, 1))                             # fraction routed
+    importance = jnp.mean(probs, axis=0)
+    return out, (load, importance)
+
+
+def apply(params, x, cfg):
+    """x: (B, S, D) -> (out, aux) with aux = dict(load, importance, aux_loss)."""
+    cap = capacity(cfg, x.shape[1])
+    out, (load, imp) = jax.vmap(
+        lambda row: _apply_row(params, row, cfg, cap))(x)
+    load, imp = jnp.mean(load, 0), jnp.mean(imp, 0)
+    # Switch-style load-balance loss: E * sum(load * importance)
+    aux_loss = cfg.num_experts * jnp.sum(load * imp)
+    return out, {"load": load, "importance": imp, "aux_loss": aux_loss}
+
+
+def bias_update(router_bias, load, rate: float = 1e-3):
+    """Aux-loss-free balancing: nudge selection bias against overloaded
+    experts (applied outside the gradient, see repro.train.step)."""
+    err = jnp.mean(load) - load           # positive for underloaded experts
+    return router_bias + rate * jnp.sign(err)

@@ -1,0 +1,110 @@
+"""Griffin recurrent block: gated branch x (conv -> RG-LRU) branch
+(arXiv:2402.19427, RecurrentGemma).
+
+The RG-LRU recurrence h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t) with
+a_t = sigma(Lambda)^(c * r_t) is evaluated with jax.lax.associative_scan in
+log-space for train/prefill and as an O(1) update for decode.
+
+Deviation noted in DESIGN.md: the gate projections (W_r, W_i) are full dense
+rather than RecurrentGemma's block-diagonal — same shapes/compute class.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, zeros_init
+
+C_EXP = 8.0
+
+
+def init(key, cfg, dtype):
+    w = cfg.resolved_lru_width
+    kx, kg, kr, ki, ka, kc, ko = jax.random.split(key, 7)
+    # Lambda init so that a ~ U[0.9, 0.999]^(1/c) region (Griffin appendix)
+    u = jax.random.uniform(ka, (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** 2 / (1 - u ** 2)) / 2.0
+    return {
+        "proj_x": dense_init(kx, (cfg.d_model, w), ("embed", "lru"), dtype),
+        "proj_gate": dense_init(kg, (cfg.d_model, w), ("embed", "lru"), dtype),
+        "w_r": dense_init(kr, (w, w), ("lru", "lru_gate"), dtype),
+        "b_r": zeros_init((w,), ("lru_gate",), jnp.float32),
+        "w_i": dense_init(ki, (w, w), ("lru", "lru_gate"), dtype),
+        "b_i": zeros_init((w,), ("lru_gate",), jnp.float32),
+        "lam": (lam, ("lru",)),
+        "conv_w": dense_init(kc, (cfg.ssm_conv, w), ("conv_k", "lru"), dtype,
+                             scale=0.5),
+        "out_proj": dense_init(ko, (w, cfg.d_model), ("lru", "embed"), dtype),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return y, xp[:, -(k - 1):]
+
+
+def _gates(params, x):
+    """log_a (B,S,W) fp32, gated input (B,S,W) fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf,
+                                  params["w_r"].astype(jnp.float32))
+                       + params["b_r"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf,
+                                  params["w_i"].astype(jnp.float32))
+                       + params["b_i"])
+    log_a = -C_EXP * r * jax.nn.softplus(params["lam"])   # log sigma(lam)^(c r)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * i * xf
+
+
+def _scan(log_a, b, h0=None):
+    """Associative scan of h_t = exp(log_a_t) h_{t-1} + b_t along axis 1."""
+    if h0 is not None:
+        # fold the initial state into the first step
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(left, right):
+        la, ba = left
+        lb, bb = right
+        return la + lb, ba * jnp.exp(lb) + bb
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def apply(params, x, cfg, state=None):
+    """Griffin recurrent block. x: (B, S, D) -> (out, new_state)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["proj_gate"]))
+    u = jnp.einsum("bsd,dw->bsw", x, params["proj_x"])
+    tail = state["conv"] if state is not None else None
+    u, new_tail = _causal_conv(u, params["conv_w"], tail)
+    log_a, b = _gates(params, u)
+    h0 = state["h"] if state is not None else None
+    h = _scan(log_a, b, h0)
+    y = (h.astype(x.dtype)) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, params["out_proj"])
+    return out, {"h": h[:, -1], "conv": new_tail}
+
+
+def decode_step(params, x, cfg, state):
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["proj_gate"]))
+    u = jnp.einsum("bsd,dw->bsw", x, params["proj_x"])
+    u, new_tail = _causal_conv(u, params["conv_w"], state["conv"])
+    log_a, b = _gates(params, u)
+    h = jnp.exp(log_a[:, 0]) * state["h"] + b[:, 0]
+    y = h[:, None].astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, params["out_proj"])
+    return out, {"h": h, "conv": new_tail}
+
+
+def init_state(cfg, batch: int, dtype):
+    w = cfg.resolved_lru_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, w), dtype)}
+
+
+STATE_AXES = {"h": ("batch", "lru"), "conv": ("batch", "conv_k", "lru")}

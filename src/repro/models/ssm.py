@@ -1,0 +1,183 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Train/prefill uses the chunked dual form: block-diagonal (intra-chunk)
+attention-like matmuls + a low-rank inter-chunk state recurrence; decode is
+the O(1) recurrent update. Both share the same math as `repro.kernels.ssd`'s
+reference and are cross-checked in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm, zeros_init
+
+
+def _dims(cfg):
+    din = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = din + 2 * n          # x, B, C go through the conv (groups=1)
+    return din, n, h, conv_dim
+
+
+def init(key, cfg, dtype):
+    din, n, h, conv_dim = _dims(cfg)
+    d_in_proj = 2 * din + 2 * n + h
+    ki, kc, ka, ko = jax.random.split(key, 4)
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32))
+    return {
+        "in_proj": dense_init(ki, (cfg.d_model, d_in_proj),
+                              ("embed", "ssm_proj"), dtype),
+        "conv_w": dense_init(kc, (cfg.ssm_conv, conv_dim),
+                             ("conv_k", "ssm_conv_dim"), dtype, scale=0.5),
+        "A_log": (a_init, ("ssm_heads",)),
+        "dt_bias": zeros_init((h,), ("ssm_heads",), jnp.float32),
+        "D": (jnp.ones((h,), jnp.float32), ("ssm_heads",)),
+        "gate_norm": zeros_init((din,), ("ssm_inner",), jnp.float32),
+        "out_proj": dense_init(ko, (din, cfg.d_model),
+                               ("ssm_inner", "embed"), dtype),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv. x: (B, S, C), w: (K, C). tail: (B, K-1, C)
+    carried state for decode. Returns (y, new_tail)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(y), xp[:, -(k - 1):]
+
+
+def _split_proj(zxbcdt, cfg):
+    din, n, h, _ = _dims(cfg)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n:]
+    return z, xbc, dt
+
+
+def _ssd_chunked(xh, dt, a_log, bm, cm, cfg, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) inputs; dt: (B, S, H) fp32 post-softplus;
+    bm/cm: (B, S, N); returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, p = xh.shape
+    n = bm.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    a = -jnp.exp(a_log)                                   # (H,) negative
+    l = dt * a                                            # (B,S,H) log-decay
+
+    def r(t, shape):  # reshape into chunks
+        return t.reshape(b, nc, q, *shape)
+
+    lc = r(l, (h,))                                       # (B,NC,Q,H)
+    xc = r(xh, (h, p))
+    dtc = r(dt, (h,))
+    bc = r(bm, (n,))
+    cc = r(cm, (n,))
+    cum = jnp.cumsum(lc, axis=2)                          # (B,NC,Q,H)
+    total = cum[:, :, -1]                                 # (B,NC,H)
+
+    # --- intra-chunk (block-diagonal dual form) ---------------------------
+    # att[b,k,h,i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j,   j <= i
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,NC,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask the *argument* (not the result): exp of the masked upper triangle
+    # overflows and inf * 0 would poison the gradient with NaNs.
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bkin,bkjn->bkij", cc, bc)            # (B,NC,Q,Q)
+    att = cb[..., None] * decay * dtc[:, :, None, :, :]   # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", att, xc.astype(jnp.float32))
+
+    # --- chunk summary states --------------------------------------------
+    # S_k[n,p] = sum_j exp(total - cum_j) * dt_j * B_j[n] * x_j[p]
+    decay_to_end = jnp.exp(total[:, :, None] - cum)       # (B,NC,Q,H)
+    sk = jnp.einsum("bkjh,bkjn,bkjhp->bkhnp",
+                    decay_to_end * dtc, bc, xc.astype(jnp.float32))
+
+    # --- inter-chunk recurrence (scan over chunks) ------------------------
+    h0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        s_k, tot = inp                                    # (B,H,N,P),(B,H)
+        out = state
+        new = state * jnp.exp(tot)[..., None, None] + s_k
+        return new, out
+
+    states = (jnp.moveaxis(sk, 1, 0), jnp.moveaxis(total, 1, 0))
+    final, prev_states = jax.lax.scan(step, h0, states)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B,NC,H,N,P)
+
+    # --- inter-chunk contribution ----------------------------------------
+    y_inter = jnp.einsum("bkih,bkin,bkhnp->bkihp",
+                         jnp.exp(cum), cc, prev_states)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(xh.dtype), final
+
+
+def apply(params, x, cfg, state=None):
+    """Full-sequence SSD block. x: (B, S, D). state: optional dict from a
+    previous segment (chunk-streaming / decode handoff).
+    Returns (out, new_state)."""
+    din, n, h, _ = _dims(cfg)
+    p = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    conv_tail = state["conv"] if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], conv_tail)
+    xs = xbc[..., :din]
+    bm = xbc[..., din:din + n]
+    cm = xbc[..., din + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xh = xs.reshape(*xs.shape[:-1], h, p)
+    init_state = state["ssm"] if state is not None else None
+    y, final = _ssd_chunked(xh, dt, params["A_log"], bm, cm, cfg, init_state)
+    y = y + (params["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*x.shape[:-1], din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"ssm": final, "conv": new_tail}
+
+
+def decode_step(params, x, cfg, state):
+    """Single-token recurrent update. x: (B, 1, D)."""
+    din, n, h, _ = _dims(cfg)
+    p = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], state["conv"])
+    xs, bm, cm = (xbc[..., :din], xbc[..., din:din + n], xbc[..., din + n:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]
+    a = jnp.exp(dt * -jnp.exp(params["A_log"]))            # (B,H)
+    xh = xs[:, 0].reshape(-1, h, p).astype(jnp.float32)    # (B,H,P)
+    bx = jnp.einsum("bn,bhp->bhnp", bm[:, 0].astype(jnp.float32),
+                    xh * dt[..., None])
+    new = state["ssm"] * a[..., None, None] + bx
+    y = jnp.einsum("bn,bhnp->bhp", cm[:, 0].astype(jnp.float32), new)
+    y = y + params["D"][:, None] * xh
+    y = y.reshape(-1, 1, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"ssm": new, "conv": new_tail}
+
+
+def init_state(cfg, batch: int, dtype):
+    din, n, h, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, n, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+STATE_AXES = {"ssm": ("batch", "ssm_heads", "ssm_state", "ssm_head_dim"),
+              "conv": ("batch", "conv_k", "ssm_conv_dim")}

@@ -1,0 +1,108 @@
+"""AdamW with fp32 master weights + cosine schedule (pure JAX, no deps).
+
+State layout (all fp32, FSDP-sharded like the params they mirror):
+  m, v        — Adam moments
+  master      — fp32 master copy of (possibly bf16) params
+  count       — step counter (scalar)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    use_master: bool = True
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decayed = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def init(params, cfg: AdamWConfig):
+    # np.zeros (not jnp): lazy jnp constants of equal shape can be deduped
+    # into ONE device buffer, which breaks donation ("donated twice").
+    import numpy as np
+
+    zeros = lambda p: np.zeros(p.shape, np.float32)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.use_master:
+        # copy=True: same-dtype astype is a no-op and would alias the param
+        # buffer with its master copy (breaking donation).
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return state
+
+
+def opt_axes(params_axes, cfg: AdamWConfig):
+    """Logical axes for the optimizer state (mirror the params)."""
+    ax = {"m": params_axes, "v": params_axes, "count": "_scalar_"}
+    if cfg.use_master:
+        ax["master"] = params_axes
+    return ax
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** c
+    bc2 = 1.0 - cfg.b2 ** c
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         state["v"], grads)
+
+    def upd(p32, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        return p32 - lr * (step + cfg.weight_decay * p32)
+
+    base = state.get("master") or jax.tree.map(
+        lambda p: p.astype(jnp.float32), params)
+    new_master = jax.tree.map(upd, base, new_m, new_v)
+    new_params = jax.tree.map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params)
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if cfg.use_master:
+        new_state["master"] = new_master
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,129 @@
+"""Train/eval/serve step builders: loss, grads, accumulation, MoE bias hook.
+
+These are the functions the launcher jits with in/out shardings and the
+dry-run lowers; they close over the ArchConfig only (no mesh knowledge —
+sharding arrives via logical constraints + jit shardings).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm, moe
+from repro.models.common import chunked_cross_entropy, softmax_cross_entropy
+from repro.train import optim
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def loss_fn(params, cfg, batch):
+    """batch: {'inputs': (B,S) or (B,S,D), 'labels': (B,S)}."""
+    inputs, labels = batch["inputs"], batch["labels"]
+    b, s = labels.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.fused_ce:
+        hidden, _, aux = lm.apply(params, cfg, inputs, positions,
+                                  return_hidden=True)
+        ce = chunked_cross_entropy(hidden, lm.head_weight(params, cfg), labels)
+    else:
+        logits, _, aux = lm.apply(params, cfg, inputs, positions)
+        ce = softmax_cross_entropy(logits, labels)
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def _microbatch(tree, idx, n):
+    return jax.tree.map(
+        lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:])[idx], tree)
+
+
+def make_train_step(cfg, opt_cfg: optim.AdamWConfig, num_microbatches: int = 1):
+    """Returns step(state, batch) -> (state, metrics). state = dict(params,
+    opt, step). Gradient accumulation via lax.scan over microbatches."""
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, parts), grads = grad_fn(params, cfg, batch)
+        return loss, parts, grads
+
+    def accumulated(params, batch):
+        def body(carry, idx):
+            loss_acc, grads_acc = carry
+            mb = _microbatch(batch, idx, num_microbatches)
+            loss, parts, grads = single(params, mb)
+            grads_acc = jax.tree.map(jnp.add, grads_acc,
+                                     jax.tree.map(
+                                         lambda g: g.astype(jnp.float32),
+                                         grads))
+            return (loss_acc + loss, grads_acc), parts
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), parts = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros),
+            jnp.arange(num_microbatches))
+        inv = 1.0 / num_microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        last_parts = jax.tree.map(lambda x: x[-1], parts)
+        return loss_sum * inv, last_parts, grads
+
+    def step(state, batch):
+        params = state["params"]
+        if num_microbatches > 1:
+            loss, parts, grads = accumulated(params, batch)
+        else:
+            loss, parts, grads = single(params, batch)
+        new_params, new_opt, om = optim.apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        if cfg.num_experts and cfg.aux_free_bias:
+            new_params = _moe_bias_update(new_params, grads, cfg)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, **parts, **om}
+        return new_state, metrics
+
+    return step
+
+
+def _moe_bias_update(params, grads, cfg):
+    """Aux-loss-free router balancing: the router gradient's per-expert
+    magnitude is a live proxy for expert load; nudge the selection bias
+    against heavy experts (applied outside the optimizer, DeepSeek-V3
+    style)."""
+
+    def fix(tree, gtree):
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(fix(t, g) for t, g in zip(tree, gtree))
+        if isinstance(tree, dict):
+            out = dict(tree)
+            if "router_bias" in tree and "router" in gtree:
+                # router weight (..., d, E) -> per-expert grad mass (..., E)
+                load_proxy = jnp.sum(jnp.abs(
+                    gtree["router"].astype(jnp.float32)), axis=-2)
+                out["router_bias"] = moe.bias_update(
+                    tree["router_bias"], load_proxy)
+            return {k: fix(v, gtree[k]) if isinstance(v, (dict, tuple, list))
+                    else out[k] for k, v in out.items()}
+        return tree
+
+    return fix(params, grads)
+
+
+def make_eval_step(cfg):
+    def step(params, batch):
+        loss, parts = loss_fn(params, cfg, batch)
+        return {"loss": loss, **parts}
+    return step
+
+
+def init_state(key, cfg, opt_cfg: optim.AdamWConfig):
+    """Returns (state, axes) — axes mirror state for sharding resolution."""
+    params, axes = lm.init(key, cfg)
+    opt = optim.init(params, opt_cfg)
+    state = {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+    state_axes = {"params": axes, "opt": optim.opt_axes(axes, opt_cfg),
+                  "step": "_scalar_"}
+    return state, state_axes

@@ -1,0 +1,172 @@
+"""Coverage for the roofline/HLO/traffic/advisor/sweep engines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core import advisor, roofline, sweep, traffic
+from repro.core.hlo import collective_summary, parse_collectives
+from repro.core.model import Workload
+from repro.core.systems import DIE_STACKED, TRADITIONAL, TiB
+
+
+class TestHloParser:
+    HLO = """
+  %ag = f32[2048,5784]{1,0} all-gather(%x), channel_id=5, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %ar = bf16[64,512]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  %rs = f32[8,128]{1,0} reduce-scatter(%g), channel_id=2, replica_groups={{0,1,2,3}}, dimensions={0}
+  %aa = f32[16,16]{1,0} all-to-all(%y), channel_id=3, replica_groups=[4,2]<=[8]
+  %cp = f32[4,4]{1,0} collective-permute(%z), channel_id=4, source_target_pairs={{0,1}}
+  %not_a_collective = f32[2,2]{1,0} add(%a, %b)
+"""
+
+    def test_parse(self):
+        ops = parse_collectives(self.HLO)
+        kinds = [o.kind for o in ops]
+        assert kinds == ["all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"]
+        ag, ar, rs, aa, cp = ops
+        assert ag.result_bytes == 2048 * 5784 * 4 and ag.group_size == 16
+        assert ar.result_bytes == 64 * 512 * 2 and ar.group_size == 4
+        assert rs.group_size == 4
+        # ring formulas
+        assert ar.ring_bytes == pytest.approx(2 * ar.result_bytes * 3 / 4)
+        assert ag.ring_bytes == pytest.approx(ag.result_bytes * 15 / 16)
+        assert rs.ring_bytes == pytest.approx(rs.result_bytes * 3)
+        assert cp.ring_bytes == cp.result_bytes
+
+    def test_summary(self):
+        s = collective_summary(self.HLO)
+        assert s["total_count"] == 5
+        assert set(s["ops"]) == {"all-gather", "all-reduce",
+                                 "reduce-scatter", "all-to-all",
+                                 "collective-permute"}
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        t = roofline.terms(197e12, 819e9, 0.0)   # 1s compute, 1s memory
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(1.0)
+        assert t.dominant in ("compute", "memory")
+        t2 = roofline.terms(1e12, 1e9, 500e9)
+        assert t2.dominant == "collective"
+        assert t2.step_time_s == pytest.approx(10.0)
+
+    def test_extrapolation_is_affine_exact(self):
+        cost_p = {"flops": 10.0}
+        cost_2p = {"flops": 16.0}    # per-layer 6, base 4
+        est = roofline.extrapolate(cost_p, cost_2p, num_layers=10, p=1)
+        assert est["flops"] == pytest.approx(4 + 10 * 6)
+
+    def test_model_flops_conventions(self):
+        cfg = get_config("mixtral-8x22b")
+        train = roofline.model_flops(cfg, SHAPES["train_4k"])
+        dec = roofline.model_flops(cfg, SHAPES["decode_32k"])
+        assert train == pytest.approx(
+            6 * cfg.active_param_count() * 4096 * 256)
+        assert dec == pytest.approx(2 * cfg.active_param_count() * 128)
+        # MoE: active < total
+        assert cfg.active_param_count() < cfg.param_count()
+
+
+class TestTraffic:
+    def test_strategies_move_bytes_where_expected(self):
+        cfg = get_config("internlm2-1.8b")
+        mesh = traffic.MeshShape.production(False)
+        base = traffic.collective_traffic(cfg, SHAPES["train_4k"], mesh,
+                                          "megatron")
+        dp = traffic.collective_traffic(cfg, SHAPES["train_4k"], mesh, "dp")
+        assert base["tp_allreduce"] > 0 and dp["tp_allreduce"] == 0
+        assert dp["total"] < base["total"]
+
+    def test_2d_decode_drops_regather(self):
+        cfg = get_config("llama3-405b")
+        mesh = traffic.MeshShape.production(False)
+        base = traffic.hbm_traffic(cfg, SHAPES["decode_32k"], mesh,
+                                   "megatron")
+        two_d = traffic.hbm_traffic(cfg, SHAPES["decode_32k"], mesh, "2d")
+        assert two_d["weights"] < base["weights"] / 10
+        coll_b = traffic.collective_traffic(cfg, SHAPES["decode_32k"], mesh,
+                                            "megatron")
+        coll_2 = traffic.collective_traffic(cfg, SHAPES["decode_32k"], mesh,
+                                            "2d")
+        assert coll_2["total"] < coll_b["total"] / 50
+
+    def test_moe_ep_alltoall_accounted(self):
+        """Fine-grained EP MoE must carry the dispatch all-to-all term
+        (and it must vanish when experts are replicated or expert-TP'd)."""
+        mesh = traffic.MeshShape.production(False)
+        moon = get_config("moonshot-v1-16b-a3b")       # 64e >= 16: EP
+        mix = get_config("mixtral-8x22b")              # 8e < 16: expert-TP
+        t_moon = traffic.collective_traffic(moon, SHAPES["train_4k"], mesh,
+                                            "megatron")
+        t_mix = traffic.collective_traffic(mix, SHAPES["train_4k"], mesh,
+                                           "megatron")
+        assert t_moon["ep_alltoall"] > 0
+        # per-layer bytes = 2 * tok_local * k * d * 2B * (g-1)/g * 3 passes
+        expect = (moon.num_layers * 2 * (4096 * 256 / 16)
+                  * moon.experts_per_token * moon.d_model * 2
+                  * (15 / 16) * 3)
+        assert t_moon["ep_alltoall"] == pytest.approx(expect)
+        assert t_mix["ep_alltoall"] == 0.0
+        t_dp = traffic.collective_traffic(moon, SHAPES["train_4k"], mesh,
+                                          "dp")
+        assert t_dp["ep_alltoall"] == 0.0
+
+    def test_decode_is_bandwidth_bound_everywhere(self):
+        """The paper's premise, checked across the zoo: decode arithmetic
+        intensity (useful flops / HBM bytes) < ridge point."""
+        mesh = traffic.MeshShape.production(False)
+        for arch in ("internlm2-1.8b", "llama3-405b", "mamba2-1.3b"):
+            cfg = get_config(arch)
+            hbm = traffic.hbm_traffic(cfg, SHAPES["decode_32k"], mesh, "2d")
+            flops = roofline.model_flops(cfg, SHAPES["decode_32k"]) / 256
+            intensity = flops / hbm["total"]
+            assert intensity < 240, (arch, intensity)  # ridge ~ 240 FLOP/B
+
+
+class TestAdvisor:
+    def test_decode_workload_mapping(self):
+        cfg = get_config("llama3-405b")
+        wl = advisor.lm_decode_workload(cfg, batch=128, seq_len=32768)
+        assert wl.db_size > 2 * cfg.param_count()     # params + cache
+        assert 0 < wl.percent_accessed <= 1.0
+
+    def test_sla_advice_meets_sla(self):
+        cfg = get_config("mixtral-8x22b")
+        for sla in (0.005, 0.050):
+            a = advisor.advise_decode_sla(cfg, 128, 32768, sla)
+            assert a.design.response_time <= sla * 1.001
+            assert a.design.holds_workload
+
+    def test_when_to_use_tpu_shape(self):
+        rows = advisor.when_to_use_tpu(get_config("internlm2-1.8b"),
+                                       128, 32768, slas=(0.005, 0.5))
+        assert len(rows) == 2
+        # tight SLA should favor the high-bandwidth system (paper Fig. 3)
+        assert rows[0]["tpu_wins_power"] or rows[0]["host_overprovision_x"] > 5
+
+
+class TestSweep:
+    def test_hard_sweep_matches_scalar_model(self):
+        from repro.core import provision_performance
+        wl = Workload(16 * TiB, 0.20)
+        slas = np.array([0.01, 0.05, 0.1, 0.5, 1.0])
+        vec = sweep.sweep_performance(TRADITIONAL, wl, slas)
+        for i, sla in enumerate(slas):
+            scalar = provision_performance(TRADITIONAL, wl, float(sla)).power
+            assert abs(float(vec[i]) - scalar) / scalar < 0.02, sla
+
+    def test_soft_model_is_differentiable_and_close(self):
+        wl = Workload(16 * TiB, 0.20)
+        hard = sweep.soft_performance_power(DIE_STACKED, wl, 0.01, hard=True)
+        soft = sweep.soft_performance_power(DIE_STACKED, wl, 0.01)
+        assert abs(float(hard) - float(soft)) / float(hard) < 0.05
+        g = sweep.power_sensitivity(DIE_STACKED, wl, 0.01)
+        # denser die-stacks cut power (fewer chips): negative gradient
+        assert g["d_power_d_log_density"] < 0
+        # cheaper cores cut power linearly in compute share: positive w.r.t.
+        # core power scale
+        assert g["d_power_d_log_core_power"] > 0

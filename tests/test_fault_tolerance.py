@@ -1,0 +1,106 @@
+"""Fault tolerance: heartbeats, stragglers, supervised restart resumes
+training from the checkpoint with a bitwise-identical data stream."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.dist.fault_tolerance import (Heartbeat, RestartPolicy,
+                                        StragglerDetector, run_supervised)
+from repro.models import lm
+from repro.train import optim, step as step_lib
+
+
+class TestHeartbeat:
+    def test_fleet_and_death(self, tmp_path):
+        a = Heartbeat(tmp_path, "host-a", timeout_s=0.2)
+        b = Heartbeat(tmp_path, "host-b", timeout_s=0.2)
+        a.beat(5)
+        b.beat(9)
+        assert set(a.fleet()) == {"host-a", "host-b"}
+        assert a.dead_hosts() == []
+        time.sleep(0.25)
+        a.beat(6)
+        assert a.dead_hosts() == ["host-b"]
+
+    def test_lagging(self, tmp_path):
+        hb = Heartbeat(tmp_path, "h0")
+        hb.beat(100)
+        Heartbeat(tmp_path, "h1").beat(80)
+        assert hb.lagging_hosts(behind_steps=10) == ["h1"]
+
+
+class TestStraggler:
+    def test_flags_slow_steps(self):
+        det = StragglerDetector(threshold=2.0, warmup=3)
+        for s in range(10):
+            assert not det.observe(s, 1.0)
+        assert det.observe(10, 5.0)           # 5x median
+        assert det.flagged == [(10, 5.0)]
+        assert not det.observe(11, 1.1)       # baseline not poisoned
+
+
+class TestSupervisedRestart:
+    def test_resumes_from_checkpoint_identically(self, tmp_path):
+        """Train 6 steps with a crash at step 3; final state must equal an
+        uninterrupted 6-step run."""
+        cfg = get_config("internlm2-1.8b").reduced(dtype="float32",
+                                                   num_layers=2)
+        opt_cfg = optim.AdamWConfig(lr=1e-3, warmup_steps=1, decay_steps=10)
+        ds = SyntheticLM(DataConfig(seed=1, vocab_size=cfg.vocab_size,
+                                    seq_len=16, global_batch=2))
+        step_fn = jax.jit(step_lib.make_train_step(cfg, opt_cfg))
+
+        def train(state, until, crash_at=None):
+            s = int(state["step"])
+            while s < until:
+                if crash_at is not None and s == crash_at:
+                    raise RuntimeError("simulated host failure")
+                batch = {k: jnp.asarray(v) for k, v in ds.batch(s).items()}
+                state, _ = step_fn(state, batch)
+                s = int(state["step"])
+            return state
+
+        init, _ = step_lib.init_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+
+        # uninterrupted reference
+        ref = train(init, 6)
+
+        # crashing run under the supervisor
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(0, init)
+        crashed = {"armed": True}
+
+        def restore():
+            state, _ = mgr.restore(init)
+            return state
+
+        def loop(state):
+            s = int(state["step"])
+            while s < 6:
+                if crashed["armed"] and s == 3:
+                    crashed["armed"] = False
+                    raise RuntimeError("simulated host failure")
+                batch = {k: jnp.asarray(v) for k, v in ds.batch(s).items()}
+                state, _ = step_fn(state, batch)
+                s = int(state["step"])
+                mgr.save(s, state)
+            return state
+
+        final, policy = run_supervised(loop, restore,
+                                       RestartPolicy(max_restarts=2))
+        assert policy.restarts == 1
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6), ref, final)
+
+    def test_gives_up_after_max_restarts(self, tmp_path):
+        def loop(_):
+            raise RuntimeError("persistent failure")
+
+        with pytest.raises(RuntimeError, match="persistent"):
+            run_supervised(loop, lambda: None, RestartPolicy(max_restarts=2))

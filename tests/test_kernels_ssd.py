@@ -1,0 +1,69 @@
+"""SSD chunk kernel: interpret-mode sweeps vs the chunk oracle AND the
+full model implementation (repro.models.ssm) — three-way agreement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_chunk import ops as ssd_ops
+from repro.kernels.ssd_chunk import ref as ssd_ref
+
+
+def make_inputs(key, b, s, h, p, n, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, h))
+    bm = jax.random.normal(ks[2], (b, s, n), jnp.float32).astype(dtype) / n**0.5
+    cm = jax.random.normal(ks[3], (b, s, n), jnp.float32).astype(dtype) / n**0.5
+    return x, dt, a_log, bm, cm
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 64, 32, 32),
+    (2, 128, 4, 64, 128, 64),
+    (1, 256, 2, 128, 64, 128),
+])
+def test_kernel_matches_chunk_ref(dtype, b, s, h, p, n, chunk):
+    x, dt, a_log, bm, cm = make_inputs(jax.random.PRNGKey(0), b, s, h, p, n,
+                                       dtype)
+    y_k, h_k = ssd_ops.ssd(x, dt, a_log, bm, cm, chunk, use_kernel=True)
+    y_r, h_r = ssd_ops.ssd(x, dt, a_log, bm, cm, chunk, use_kernel=False)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_kernel_matches_model_ssd():
+    """Three-way: kernel == chunk oracle == the model's _ssd_chunked."""
+    from repro.models import ssm
+    from repro.configs import get_config
+
+    cfg = get_config("mamba2-1.3b").reduced(dtype="float32", ssm_chunk=32)
+    b, s = 2, 128
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x, dt, a_log, bm, cm = make_inputs(jax.random.PRNGKey(1), b, s, h, p, n)
+
+    y_model, h_model = ssm._ssd_chunked(x, dt, a_log, bm, cm, cfg)
+    y_kernel, h_kernel = ssd_ops.ssd(x, dt, a_log, bm, cm, cfg.ssm_chunk)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kernel),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h_model),
+                               np.asarray(jnp.swapaxes(h_kernel, 2, 2)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_chunk_independence():
+    """Chunk size must not change the math (32 vs 128)."""
+    x, dt, a_log, bm, cm = make_inputs(jax.random.PRNGKey(2), 1, 256, 2, 64,
+                                       32)
+    y1, h1 = ssd_ops.ssd(x, dt, a_log, bm, cm, 32)
+    y2, h2 = ssd_ops.ssd(x, dt, a_log, bm, cm, 128)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-3, atol=1e-3)

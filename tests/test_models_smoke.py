@@ -1,0 +1,132 @@
+"""Per-arch smoke tests on reduced configs (deliverable f).
+
+For every assigned architecture: instantiate a tiny same-family config, run
+forward + train step + prefill/decode on CPU, assert shapes + no NaNs, and
+check decode-vs-full-forward consistency (the strongest correctness check:
+the recurrent/cached path must reproduce the parallel path).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import lm
+from repro.models.common import dtype_of
+from repro.train import optim, step as step_lib
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 64
+
+
+def reduced(arch_id, **over):
+    # fp32 for tight decode-vs-forward comparisons
+    return get_config(arch_id).reduced(dtype="float32", **over)
+
+
+def make_inputs(cfg, key, b=B, s=S):
+    if cfg.input_mode == "tokens":
+        return jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch_id):
+    cfg = reduced(arch_id)
+    params, axes = lm.init(KEY, cfg)
+    # axes tree mirrors params tree
+    assert jax.tree.structure(params) == jax.tree.structure(axes)
+    inputs = make_inputs(cfg, KEY)
+    logits, _, aux = lm.prefill(params, cfg, inputs, caches=None)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all()
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_step_decreases_loss(arch_id):
+    cfg = reduced(arch_id)
+    opt_cfg = optim.AdamWConfig(lr=5e-3, warmup_steps=1, decay_steps=100)
+    state, _ = step_lib.init_state(KEY, cfg, opt_cfg)
+    step = jax.jit(step_lib.make_train_step(cfg, opt_cfg))
+    batch = {"inputs": make_inputs(cfg, KEY),
+             "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    losses = []
+    for _ in range(5):
+        state, metrics = step(state, batch)
+        assert jnp.isfinite(metrics["loss"])
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses  # memorizes a fixed batch
+    assert int(state["step"]) == 5
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_matches_forward(arch_id):
+    """Prefill s tokens then decode the rest one-by-one; logits must match
+    the all-at-once forward pass."""
+    cfg = reduced(arch_id)
+    params, _ = lm.init(KEY, cfg)
+    inputs = make_inputs(cfg, KEY)
+    full_logits, _, _ = lm.prefill(params, cfg, inputs, caches=None)
+
+    split = S // 2
+    caches, _ = lm.init_caches(cfg, B, S, dtype_of(cfg.dtype))
+    pre = inputs[:, :split]
+    logits_pre, caches, _ = lm.prefill(params, cfg, pre, caches)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre, np.float32),
+        np.asarray(full_logits[:, :split], np.float32),
+        rtol=2e-4, atol=2e-4)
+
+    step = jax.jit(lambda tok, lens, caches: lm.decode_step(
+        params, cfg, tok, lens, caches)[:2])
+    for t in range(split, S):
+        tok = inputs[:, t:t + 1]
+        lens = jnp.full((B,), t, jnp.int32)
+        logits_t, caches = step(tok, lens, caches)
+        np.testing.assert_allclose(
+            np.asarray(logits_t[:, 0], np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            rtol=2e-3, atol=2e-3, err_msg=f"{arch_id} pos {t}")
+
+
+@pytest.mark.parametrize("arch_id", ["internlm2-1.8b", "mixtral-8x22b",
+                                     "recurrentgemma-2b", "mamba2-1.3b"])
+def test_scan_equals_unrolled(arch_id):
+    """scan-over-layers and the unrolled python loop are the same program."""
+    cfg = reduced(arch_id)
+    params, _ = lm.init(KEY, cfg)
+    inputs = make_inputs(cfg, KEY)
+    a, _, _ = lm.prefill(params, cfg, inputs, caches=None)
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    b_, _, _ = lm.prefill(params, cfg2, inputs, caches=None)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b_, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_param_count_matches_analytic():
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        shapes = jax.eval_shape(lambda k: lm.init(k, cfg)[0], KEY)
+        actual = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+        assert actual == cfg.param_count(), (
+            arch_id, actual, cfg.param_count())
+
+
+def test_full_scale_param_counts_sane():
+    """Published param counts within tolerance (arch name encodes size)."""
+    # Expected totals follow the ASSIGNED configs (the task pins exact dims;
+    # where a marketing name disagrees — e.g. moonshot "16b" at 48 layers of
+    # 64 experts gives 28B — the assignment wins; see DESIGN.md §3).
+    expect = {
+        "mamba2-1.3b": (1.3e9, 0.08), "internlm2-1.8b": (1.8e9, 0.10),
+        "minitron-4b": (4.19e9, 0.08), "llama3-405b": (405e9, 0.03),
+        "mistral-large-123b": (123e9, 0.03), "mixtral-8x22b": (141e9, 0.05),
+        "moonshot-v1-16b-a3b": (28e9, 0.05), "musicgen-large": (3.3e9, 0.05),
+        "recurrentgemma-2b": (2.7e9, 0.08), "internvl2-76b": (69.5e9, 0.05),
+    }
+    for arch_id, (n, tol) in expect.items():
+        got = get_config(arch_id).param_count()
+        assert abs(got - n) / n < tol, (arch_id, got, n)

@@ -1,0 +1,250 @@
+"""Validate the analytical model against every quantitative claim in the paper.
+
+Each test cites the paper section making the claim. Where the paper's own
+arithmetic is internally inconsistent (Table 2 rounding, see DESIGN.md §2.1)
+we assert our exact derivation and that the paper's number is within 10%.
+"""
+import math
+
+import pytest
+
+from repro.core import (BIG_MEMORY, DIE_STACKED, TRADITIONAL, Workload,
+                        power_crossover_sla, provision_capacity,
+                        provision_performance, provision_power)
+from repro.core.systems import GB, TiB
+
+WL = Workload(db_size=16 * TiB, percent_accessed=0.20)
+
+
+def within(x, ref, tol):
+    return abs(x - ref) <= tol * ref
+
+
+# --------------------------------------------------------------------------
+# §1 / Fig. 1 — bandwidth-capacity ratios
+# --------------------------------------------------------------------------
+class TestBandwidthCapacityRatio:
+    def test_die_vs_traditional_80x(self):
+        r = DIE_STACKED.bandwidth_capacity_ratio / TRADITIONAL.bandwidth_capacity_ratio
+        assert within(r, 80.0, 0.02), r
+
+    def test_die_vs_big_memory_341x(self):
+        r = DIE_STACKED.bandwidth_capacity_ratio / BIG_MEMORY.bandwidth_capacity_ratio
+        assert within(r, 341.0, 0.02), r
+
+    def test_chip_level_datasheet(self):
+        # §3: 102 GB/s and 256 GiB per traditional socket; 192 GB/s big-memory
+        assert TRADITIONAL.chip_bandwidth == pytest.approx(102.4 * GB)
+        assert TRADITIONAL.chip_capacity == pytest.approx(256 * 2**30)
+        assert BIG_MEMORY.chip_bandwidth == pytest.approx(192 * GB)
+        assert DIE_STACKED.chip_bandwidth == pytest.approx(256 * GB)
+        # Eq. 4: die-stacked chips are *compute*-limited (32 x 6 GB/s < 256 GB/s)
+        assert DIE_STACKED.chip_peak_perf == pytest.approx(192 * GB)
+
+
+# --------------------------------------------------------------------------
+# §5.3 / Fig. 5 — capacity provisioning (16 TiB, 20% accessed)
+# --------------------------------------------------------------------------
+class TestCapacityProvisioning:
+    def designs(self):
+        return {s.name: provision_capacity(s, WL)
+                for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED)}
+
+    def test_cluster_shapes(self):
+        d = self.designs()
+        assert d["traditional"].compute_chips == 64
+        assert d["big-memory"].compute_chips == 8
+        assert d["die-stacked"].compute_chips == 2048   # "over 2000 stacks" §7
+        assert d["die-stacked"].blades == 228           # Table 2
+        assert all(x.holds_workload for x in d.values())
+
+    def test_response_times_intro_claim(self):
+        # §1: "big-memory takes over 2 seconds, traditional 500 ms,
+        #      die-stacked less than 10 ms"
+        d = self.designs()
+        assert d["big-memory"].response_time > 2.0
+        assert within(d["traditional"].response_time, 0.5, 0.1)
+        assert d["die-stacked"].response_time < 0.010
+
+    def test_speedups_256x_and_60x(self):
+        # §5.3: die-stacked 256x faster than big-memory, 60x than traditional
+        d = self.designs()
+        s_big = d["big-memory"].response_time / d["die-stacked"].response_time
+        s_trad = d["traditional"].response_time / d["die-stacked"].response_time
+        assert within(s_big, 256.0, 0.01), s_big
+        assert within(s_trad, 60.0, 0.01), s_trad
+
+    def test_aggregate_bandwidths(self):
+        # §5.3: 512 TB/s (die), 6.4 TB/s (trad), 1.5 TB/s (big)
+        d = self.designs()
+        assert within(d["die-stacked"].aggregate_bandwidth, 512e12, 0.03)
+        assert within(d["traditional"].aggregate_bandwidth, 6.4e12, 0.03)
+        assert within(d["big-memory"].aggregate_bandwidth, 1.5e12, 0.03)
+
+    def test_power_26_to_50x(self):
+        # §5.3: die-stacked uses 26-50x more power
+        d = self.designs()
+        r_trad = d["die-stacked"].power / d["traditional"].power
+        r_big = d["die-stacked"].power / d["big-memory"].power
+        assert within(r_trad, 26.0, 0.05), r_trad
+        assert within(r_big, 50.0, 0.05), r_big
+
+    def test_energy_die_5x_less_than_big(self):
+        # §5.3 / Fig. 6a: about 5x less energy
+        d = self.designs()
+        r = d["big-memory"].energy_per_query / d["die-stacked"].energy_per_query
+        assert within(r, 5.0, 0.1), r
+
+    def test_fig5_larger_corpora_constant_access(self):
+        # Fig. 5: 160 TiB and 32 TiB rows keep bytes_accessed = 3.2 TiB
+        big = provision_capacity(TRADITIONAL, WL, capacity=160 * TiB)
+        assert big.workload.bytes_accessed == pytest.approx(WL.bytes_accessed)
+        assert big.compute_chips == 640
+        # 10x the machine streaming the same bytes -> 10x faster
+        base = provision_capacity(TRADITIONAL, WL)
+        assert within(base.response_time / big.response_time, 10.0, 0.02)
+
+
+# --------------------------------------------------------------------------
+# §5.1 / Fig. 3 / Table 2 — performance provisioning
+# --------------------------------------------------------------------------
+class TestPerformanceProvisioning:
+    def test_table2_10ms(self):
+        trad = provision_performance(TRADITIONAL, WL, 0.010)
+        big = provision_performance(BIG_MEMORY, WL, 0.010)
+        die = provision_performance(DIE_STACKED, WL, 0.010)
+
+        # our exact derivations
+        assert trad.compute_chips == 3436 and trad.blades == 859
+        assert big.compute_chips == 1833 and big.blades == 1833
+        assert die.compute_chips == 2048 and die.blades == 228
+
+        # paper's rounded Table 2 within 10% (DESIGN.md §2.1):
+        assert within(trad.compute_chips, 3200, 0.10)
+        assert within(trad.blades, 800, 0.10)
+        assert within(big.compute_chips, 1700, 0.10)
+        assert within(die.aggregate_bandwidth, 384e12 * 256 / 192, 0.05)
+
+        # every design actually meets the SLA and holds the data
+        for d in (trad, big, die):
+            assert d.response_time <= 0.010 * 1.001
+            assert d.holds_workload
+
+    def test_overprovisioning_50x_213x(self):
+        # §5.1: traditional 50x, big-memory 213x over-provisioned at 10 ms
+        trad = provision_performance(TRADITIONAL, WL, 0.010)
+        big = provision_performance(BIG_MEMORY, WL, 0.010)
+        die = provision_performance(DIE_STACKED, WL, 0.010)
+        assert within(trad.overprovision_factor, 50.0, 0.12)
+        assert within(big.overprovision_factor, 213.0, 0.10)
+        assert die.overprovision_factor <= 1.01   # "not over provisioned at all"
+
+    def test_die_5x_less_power_at_10ms(self):
+        # §5.1: "die-stacked uses almost 5x less power" (vs big-memory)
+        big = provision_performance(BIG_MEMORY, WL, 0.010)
+        die = provision_performance(DIE_STACKED, WL, 0.010)
+        assert 3.5 <= big.power / die.power <= 5.5
+
+    def test_relaxed_sla_favors_current_systems(self):
+        # §5.1: at 100 ms / 1 s die-stacked uses about the same or more power
+        for sla in (0.100, 1.0):
+            trad = provision_performance(TRADITIONAL, WL, sla)
+            die = provision_performance(DIE_STACKED, WL, sla)
+            assert die.power >= 0.95 * trad.power
+
+    def test_crossover_60ms(self):
+        t = power_crossover_sla(TRADITIONAL, DIE_STACKED, WL)
+        assert t is not None and 0.045 <= t <= 0.075, t
+
+    def test_crossover_170ms_at_50pct(self):
+        wl = Workload(db_size=16 * TiB, percent_accessed=0.50)
+        t = power_crossover_sla(TRADITIONAL, DIE_STACKED, wl)
+        assert t is not None and 0.13 <= t <= 0.21, t
+
+    def test_crossover_800ms_with_8x_density(self):
+        # §5.1/§6.1: 8x denser die-stacks move the crossover to ~800 ms.
+        # In this regime both systems are capacity-bound and their continuous
+        # power curves are *parallel* (constant ~3% gap), so the ceil-induced
+        # discrete curves oscillate through zero across [0.5s, ~5s]; the
+        # paper's "about 800 ms" is a point in that band. We assert (a) the
+        # first crossing falls in the band and (b) at 800 ms the two systems'
+        # power is within 5% — i.e. the curves have met by then.
+        die8 = DIE_STACKED.with_density(8)
+        t = power_crossover_sla(TRADITIONAL, die8, WL)
+        assert t is not None and 0.45 <= t <= 1.2, t
+        p_trad = provision_performance(TRADITIONAL, WL, 0.800).power
+        p_die = provision_performance(die8, WL, 0.800).power
+        assert abs(p_trad - p_die) / p_trad < 0.05
+        # and well before the band the die-stacked system is strictly cheaper
+        assert provision_performance(die8, WL, 0.100).power < \
+            provision_performance(TRADITIONAL, WL, 0.100).power
+
+    def test_denser_memory_never_helps_performance(self):
+        # §6.1: "increasing density does not directly affect performance"
+        for s in (TRADITIONAL, DIE_STACKED):
+            a = provision_capacity(s, WL)
+            b = provision_capacity(s.with_density(8), WL)
+            assert b.response_time >= a.response_time  # fewer chips => slower or equal
+
+
+# --------------------------------------------------------------------------
+# §5.2 / Fig. 4 — power provisioning
+# --------------------------------------------------------------------------
+class TestPowerProvisioning:
+    def test_1mw_all_meet_10ms(self):
+        for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+            d = provision_power(s, WL, 1e6)
+            assert d.response_time <= 0.011, (s.name, d.response_time)
+            assert d.holds_workload
+
+    def test_1mw_traditional_blades_over_1300(self):
+        d = provision_power(TRADITIONAL, WL, 1e6)
+        assert 1300 <= d.blades <= 1400, d.blades
+
+    def test_1mw_die_5x_faster_than_big(self):
+        die = provision_power(DIE_STACKED, WL, 1e6)
+        big = provision_power(BIG_MEMORY, WL, 1e6)
+        assert within(big.response_time / die.response_time, 5.0, 0.1)
+
+    def test_50kw_die_is_slowest_with_1_core(self):
+        # §5.2: strict budgets invert the ranking; die-stacked runs 1 core/chip
+        die = provision_power(DIE_STACKED, WL, 50e3)
+        trad = provision_power(TRADITIONAL, WL, 50e3)
+        big = provision_power(BIG_MEMORY, WL, 50e3)
+        assert die.cores_per_chip == 1
+        assert die.response_time > trad.response_time
+        assert die.response_time > big.response_time
+        for d in (die, trad, big):
+            assert d.power <= 50e3 * 1.001
+            assert d.holds_workload
+
+    def test_budget_is_respected(self):
+        for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+            for budget in (60e3, 250e3, 1e6):
+                d = provision_power(s, WL, budget)
+                assert d.power <= budget * 1.001, (s.name, budget, d.power)
+
+    def test_big_memory_has_most_capacity_at_fixed_power(self):
+        # §1 finding: "the big-memory system provides the most memory capacity"
+        caps = {s.name: provision_power(s, WL, 1e6).memory_capacity
+                for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED)}
+        assert caps["big-memory"] == max(caps.values())
+
+
+# --------------------------------------------------------------------------
+# §6.1 — improvement levers
+# --------------------------------------------------------------------------
+class TestImprovementLevers:
+    def test_10x_lower_compute_power_helps_die_stacked(self):
+        die10 = DIE_STACKED.with_compute_power(0.1)
+        base = provision_capacity(DIE_STACKED, WL)
+        better = provision_capacity(die10, WL)
+        assert better.power < base.power
+        assert better.response_time == base.response_time  # perf unchanged
+        assert better.energy_per_query < base.energy_per_query
+
+    def test_density_cuts_power_for_all(self):
+        for s in (TRADITIONAL, BIG_MEMORY, DIE_STACKED):
+            a = provision_capacity(s, WL)
+            b = provision_capacity(s.with_density(8), WL)
+            assert b.power < a.power

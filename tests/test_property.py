@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BIG_MEMORY, DIE_STACKED, TRADITIONAL, Workload,
+                        provision_capacity, provision_performance,
+                        provision_power)
+from repro.core.systems import TiB
+from repro.kernels.scan_filter import ops as scan_ops
+from repro.kernels.scan_filter import ref as scan_ref
+
+SYSTEMS = (TRADITIONAL, BIG_MEMORY, DIE_STACKED)
+
+workloads = st.builds(
+    Workload,
+    db_size=st.floats(0.5 * TiB, 64 * TiB),
+    percent_accessed=st.floats(0.01, 1.0),
+)
+
+
+# --------------------------------------------------------------------------
+# analytical model invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(wl=workloads, sla=st.floats(1e-3, 5.0),
+       sys_i=st.integers(0, len(SYSTEMS) - 1))
+def test_performance_provisioning_meets_sla_and_capacity(wl, sla, sys_i):
+    d = provision_performance(SYSTEMS[sys_i], wl, sla)
+    assert d.response_time <= sla * 1.001
+    assert d.holds_workload
+
+
+@settings(max_examples=60, deadline=None)
+@given(wl=workloads, budget=st.floats(5e3, 5e6),
+       sys_i=st.integers(0, len(SYSTEMS) - 1))
+def test_power_provisioning_respects_budget(wl, budget, sys_i):
+    d = provision_power(SYSTEMS[sys_i], wl, budget)
+    cap_power = provision_power(SYSTEMS[sys_i], wl, 0.0).power
+    # budget below the capacity-floor cluster cost is infeasible by
+    # construction (the workload must stay resident) — skip those
+    if budget >= cap_power:
+        assert d.power <= budget * 1.001
+    assert d.holds_workload
+
+
+@settings(max_examples=40, deadline=None)
+@given(wl=workloads, sys_i=st.integers(0, len(SYSTEMS) - 1))
+def test_tighter_sla_never_needs_fewer_chips(wl, sys_i):
+    tight = provision_performance(SYSTEMS[sys_i], wl, 0.01)
+    loose = provision_performance(SYSTEMS[sys_i], wl, 1.0)
+    assert tight.compute_chips >= loose.compute_chips
+    assert tight.power >= loose.power * 0.999
+
+
+@settings(max_examples=40, deadline=None)
+@given(wl=workloads, sys_i=st.integers(0, len(SYSTEMS) - 1))
+def test_capacity_design_races_to_halt(wl, sys_i):
+    """Capacity provisioning runs chips at the Eq.4/5 saturating point:
+    adding cores can't help (bandwidth-bound) and removing them hurts."""
+    d = provision_capacity(SYSTEMS[sys_i], wl)
+    s = SYSTEMS[sys_i]
+    assert d.chip_perf == min(s.chip_peak_perf, s.chip_bandwidth)
+    assert d.holds_workload
+
+
+@settings(max_examples=30, deadline=None)
+@given(wl=workloads)
+def test_bandwidth_capacity_ordering_is_invariant(wl):
+    """The paper's Fig. 1 ordering holds for every workload: die-stacked
+    always answers a fixed-fraction query fastest under capacity
+    provisioning."""
+    rts = {s.name: provision_capacity(s, wl).response_time for s in SYSTEMS}
+    assert rts["die-stacked"] <= rts["traditional"] <= rts["big-memory"]
+
+
+# --------------------------------------------------------------------------
+# kernel invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    codes=st.lists(st.integers(0, 127), min_size=1, max_size=2000),
+    const=st.integers(0, 127),
+    op=st.sampled_from(scan_ref.OPS),
+)
+def test_scan_filter_matches_numpy(codes, const, op):
+    codes = np.asarray(codes, np.uint32)
+    packed = scan_ref.pack(codes, 8)
+    mask = scan_ops.scan_filter(packed, const, op, 8)
+    got = np.asarray(scan_ref.unpack_mask(mask, 8))[:len(codes)]
+    want = {
+        "lt": codes < const, "le": codes <= const, "gt": codes > const,
+        "ge": codes >= const, "eq": codes == const, "ne": codes != const,
+    }[op]
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(codes=st.lists(st.integers(0, 32766), min_size=1, max_size=500),
+       bits=st.sampled_from([4, 8, 16]))
+def test_pack_unpack_roundtrip(codes, bits):
+    vmax = (1 << (bits - 1)) - 1
+    codes = np.asarray(codes, np.uint32) % (vmax + 1)
+    packed = scan_ref.pack(codes, bits)
+    got = np.asarray(scan_ref.unpack(packed, bits))[:len(codes)]
+    np.testing.assert_array_equal(got, codes)
+
+
+# --------------------------------------------------------------------------
+# MoE dispatch invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.integers(4, 64),
+       e=st.sampled_from([4, 8]), k=st.sampled_from([1, 2]))
+def test_moe_dispatch_conservation(seed, s, e, k):
+    """Every kept slot routes a real token to the expert its router chose,
+    ranks are unique per expert, and combine weights of kept slots sum to
+    <= 1 per token."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.moe import _dispatch_indices
+
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (s, e))
+    w, idx = jax.lax.top_k(jax.nn.softmax(logits), k)
+    w = w / jnp.sum(w, axis=1, keepdims=True)
+    cap = max(1, (s * k) // e)
+    token_for, weight_for = _dispatch_indices(idx, w, e, cap)
+    token_for = np.asarray(token_for)
+    weight_for = np.asarray(weight_for)
+    idx_np = np.asarray(idx)
+
+    per_token = np.zeros(s)
+    for ei in range(e):
+        for ci in range(cap):
+            wgt = weight_for[ei, ci]
+            if wgt > 0:
+                tok = token_for[ei, ci]
+                assert ei in idx_np[tok], "token routed to unchosen expert"
+                per_token[tok] += wgt
+    assert (per_token <= 1.0 + 1e-5).all()

@@ -1,0 +1,79 @@
+"""Logical-axis sharding resolution unit tests (no devices needed beyond 1:
+resolution is pure math over the mesh shape)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import DEFAULT_RULES, resolve_spec
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+class FakeMesh:
+    """Duck-typed mesh: resolve_spec only reads axis_names and shape."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def spec(shape, names, mesh=SINGLE, rules=None):
+    return resolve_spec(shape, names, mesh, dict(DEFAULT_RULES,
+                                                 **(rules or {})))
+
+
+def test_tp_plus_fsdp():
+    assert spec((4096, 8192), ("embed", "mlp")) == P("data", "model")
+
+
+def test_missing_axis_dropped():
+    # 'pod' not in the single mesh -> silently dropped
+    assert spec((256, 64), ("batch", None)) == P("data")
+    assert spec((256, 64), ("batch", None), MULTI) == P(("pod", "data"))
+
+
+def test_indivisible_falls_back():
+    # 24 heads over 16-way model axis: dropped (jit needs divisibility)
+    assert spec((3072, 24, 128), ("embed", "heads", "head_dim")) == P("data")
+    # divisible head counts shard
+    assert spec((4096, 32, 128), ("embed", "heads", "head_dim")) == \
+        P("data", "model")
+
+
+def test_axis_never_reused_within_array():
+    # both dims want 'model'; the second claim loses
+    s = spec((1024, 2048), ("mlp", "vocab"))
+    assert s == P("model")
+
+
+def test_fsdp_over_pod_and_data():
+    s = spec((16384, 53248), ("embed", "mlp"), MULTI,
+             rules={"embed": ("data", "pod")})
+    assert s == P(("data", "pod"), "model")
+
+
+def test_experts_ep_vs_tp():
+    # 64 experts: EP over model
+    assert spec((64, 2048, 1408), ("experts", "embed", "expert_mlp")) == \
+        P("model", "data")
+    # 8 experts < 16: EP dropped, expert-TP picks up the ffn dim
+    assert spec((8, 6144, 16384), ("experts", "embed", "expert_mlp")) == \
+        P(None, "data", "model")
+
+
+def test_trailing_nones_trimmed():
+    s = spec((32, 128), (None, None))
+    assert s == P()
+
+
+def test_scalar():
+    assert spec((), "_scalar_") == P()
+
+
+def test_string_axes_leaf():
+    assert spec((4096, 8192), "embed mlp") == P("data", "model")
+    assert spec((128, 64), "batch _") == P("data")
