@@ -1,10 +1,21 @@
-"""Kernel micro-benchmarks.
+"""Kernel micro-benchmarks, wired through the block-size autotuner.
 
-On this CPU container the Pallas kernels run in interpret mode (not
-representative), so wall-time rows time the jnp fallback path and `derived`
-reports the scan's achieved GB/s plus the analytic arithmetic intensity the
-kernel presents to the roofline (the paper's ~4 bytes/instr claim)."""
+Times the BitWeaving scan at the hardcoded default block size and at the
+autotuned one (repro.kernels.tune sweeps candidates and caches the winner
+in artifacts/tune_cache.json), and appends the pair to BENCH_kernels.json
+at the repo root — a trajectory file future PRs diff against to catch
+block-size and dispatch regressions.
+
+On this CPU container the Pallas kernels run in interpret mode, where the
+per-grid-step interpreter overhead makes block size matter *more* than on
+TPU; the jnp fallback row is kept as the hardware-bandwidth reference
+(the paper's ~4 bytes/instr scan regime).
+"""
 from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +23,33 @@ import numpy as np
 
 from benchmarks.common import timed
 from repro.db import Predicate, Table, scan_aggregate_query
+from repro.kernels import dispatch, tune
+from repro.kernels.scan_filter import kernel as K
 from repro.kernels.scan_filter import ops as scan_ops
 from repro.kernels.scan_filter import ref as scan_ref
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+
+
+def _record(rec: dict) -> None:
+    """Append one run to the BENCH_kernels.json trajectory."""
+    try:
+        hist = json.loads(BENCH_PATH.read_text())
+        assert isinstance(hist, list)
+    except (OSError, ValueError, AssertionError):
+        hist = []
+    hist.append(rec)
+    BENCH_PATH.write_text(json.dumps(hist, indent=1))
+
+
+def _scan_gbps(w2d, block_rows: int, interpret: bool) -> float:
+    def run():
+        K.scan_packed(w2d, 64, op="ge", code_bits=8,
+                      block_rows=block_rows,
+                      interpret=interpret).block_until_ready()
+
+    _, us = timed(run, repeat=3)
+    return w2d.nbytes / (us / 1e6) / 1e9
 
 
 def rows():
@@ -21,7 +57,34 @@ def rows():
     n = 1 << 22                      # 4M codes
     codes = np.random.default_rng(0).integers(0, 128, n)
     packed = jnp.asarray(scan_ref.pack(codes, 8))
+    w2d = packed.reshape(-1, K.LANES)
+    nrows = w2d.shape[0]
+    interpret = dispatch.resolve("pallas").interpret
 
+    # --- autotune the scan block size (cache hit after the first run) ----
+    skey = tune.shape_key(rows=nrows, bits=8)
+    candidates = dict(dispatch.get("scan_filter").tunables)
+
+    def bench(params):
+        K.scan_packed(w2d, 64, op="ge", code_bits=8,
+                      block_rows=min(params["block_rows"], nrows),
+                      interpret=interpret).block_until_ready()
+
+    entry = tune.autotune("scan_filter", skey, candidates, bench)
+    tuned_br = min(int(entry["params"]["block_rows"]), nrows)
+
+    default_gbps = _scan_gbps(w2d, min(K.DEFAULT_BLOCK_ROWS, nrows),
+                              interpret)
+    tuned_gbps = _scan_gbps(w2d, tuned_br, interpret)
+    speedup = tuned_gbps / default_gbps
+    out.append(("kernels/scan8b_4M/pallas_default_block", 0.0,
+                f"{default_gbps:.2f}GBps@br={K.DEFAULT_BLOCK_ROWS}"))
+    out.append(("kernels/scan8b_4M/pallas_tuned_block", 0.0,
+                f"{tuned_gbps:.2f}GBps@br={tuned_br}"))
+    out.append(("kernels/scan8b_4M/tuned_speedup", 0.0,
+                f"{speedup:.2f}x"))
+
+    # --- hardware-bandwidth reference: the jnp fallback path -------------
     def scan_ref_path():
         return scan_ops.scan_filter(packed, 64, "lt", 8,
                                     use_kernel=False).block_until_ready()
@@ -32,12 +95,28 @@ def rows():
     out.append(("kernels/scan8b/intensity", 0.0,
                 "3int_ops_per_4B_word(bandwidth-bound)"))
 
+    _record({
+        "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "op": "scan_filter",
+        "shape_key": skey,
+        "default_block_rows": K.DEFAULT_BLOCK_ROWS,
+        "default_gbps": round(default_gbps, 3),
+        "tuned_block_rows": tuned_br,
+        "tuned_gbps": round(tuned_gbps, 3),
+        "speedup": round(speedup, 3),
+        "jnp_ref_gbps": round(gbps, 3),
+        "sweep": entry["sweep"],
+    })
+
     t = Table.synthetic("t", 1 << 20, {"a": 8, "b": 8})
+
     def q():
         r = scan_aggregate_query(t, [Predicate("a", "lt", 64)], "b",
                                  use_kernel=False)
         jax.block_until_ready(r["sum"])
         return r
+
     r, us = timed(q, repeat=3)
     out.append(("db/scan_aggregate_1M", us,
                 f"sel={float(r['selectivity']):.3f}"))

@@ -1,9 +1,13 @@
 """Benchmark driver: one module per paper table/figure (+ beyond-paper).
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows, or a JSON array with
+``--json``. ``--only substr`` restricts to matching module names (CI runs
+``--only kernels --json`` as the smoke invocation).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
@@ -22,17 +26,34 @@ MODULES = (
 )
 
 
-def main() -> None:
-    print("name,us_per_call,derived")
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="emit a JSON array instead of CSV rows")
+    ap.add_argument("--only", default="",
+                    help="run only modules whose name contains this")
+    args = ap.parse_args(argv)
+
+    modules = [m for m in MODULES if args.only in m]
+    records = []
+    if not args.json:
+        print("name,us_per_call,derived")
     failed = []
-    for modname in MODULES:
+    for modname in modules:
         try:
             mod = __import__(modname, fromlist=["rows"])
-            emit(mod.rows())
+            rows = mod.rows()
         except Exception:
             failed.append(modname)
             traceback.print_exc(file=sys.stderr)
-            print(f"{modname},0.0,ERROR")
+            rows = [(modname, 0.0, "ERROR")]
+        if args.json:
+            records += [{"name": n, "us_per_call": us, "derived": d}
+                        for n, us, d in rows]
+        else:
+            emit(rows)
+    if args.json:
+        print(json.dumps(records, indent=1))
     if failed:
         raise SystemExit(f"benchmark failures: {failed}")
 

@@ -1,0 +1,8 @@
+"""Distribution substrate: logical-axis sharding, sharding strategies,
+fault tolerance, gradient compression, and pipeline parallelism.
+
+Models never name mesh axes directly — they annotate arrays with logical
+axis names (repro.models.common) and this package resolves those names to
+mesh axes through per-cell rule tables (sharding.py), optionally overridden
+by a named strategy (strategies.py).
+"""

@@ -1,0 +1,118 @@
+"""Fault tolerance: file-based heartbeats, straggler detection, and
+supervised crash-restart.
+
+All host-side and dependency-free: heartbeats are one JSON file per host in
+a shared directory (the multi-host lowest common denominator — works over
+NFS/GCS-fuse), the straggler detector is a median filter over step times,
+and `run_supervised` restarts a training loop from its latest checkpoint up
+to a restart budget (tests assert bitwise-identical resumption).
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+
+class Heartbeat:
+    """Per-host liveness + progress beacon over a shared directory."""
+
+    def __init__(self, directory, host: str, timeout_s: float = 30.0):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.host = host
+        self.timeout_s = timeout_s
+
+    def _path(self, host: str) -> Path:
+        return self.dir / f"{host}.heartbeat"
+
+    def beat(self, step: int) -> None:
+        tmp = self._path(self.host).with_suffix(".tmp")
+        tmp.write_text(json.dumps({"host": self.host, "step": int(step),
+                                   "time": time.time()}))
+        tmp.replace(self._path(self.host))
+
+    def _read_all(self) -> dict:
+        out = {}
+        for p in sorted(self.dir.glob("*.heartbeat")):
+            try:
+                rec = json.loads(p.read_text())
+                out[rec["host"]] = rec
+            except (ValueError, KeyError, OSError):
+                continue
+        return out
+
+    def fleet(self) -> list:
+        return sorted(self._read_all())
+
+    def dead_hosts(self) -> list:
+        now = time.time()
+        return sorted(h for h, rec in self._read_all().items()
+                      if now - rec["time"] > self.timeout_s)
+
+    def lagging_hosts(self, behind_steps: int) -> list:
+        recs = self._read_all()
+        if not recs:
+            return []
+        lead = max(rec["step"] for rec in recs.values())
+        return sorted(h for h, rec in recs.items()
+                      if rec["step"] < lead - behind_steps + 1)
+
+
+class StragglerDetector:
+    """Flags steps slower than `threshold` x the median of clean steps.
+
+    Flagged steps are excluded from the baseline so one straggler does not
+    poison the median and mask the next one.
+    """
+
+    def __init__(self, threshold: float = 2.0, warmup: int = 3,
+                 window: int = 50):
+        self.threshold = threshold
+        self.warmup = warmup
+        self.window = window
+        self._clean: list = []
+        self.flagged: list = []
+        self.ewma = 0.0
+
+    def observe(self, step: int, seconds: float) -> bool:
+        self.ewma = (seconds if not self._clean
+                     else 0.9 * self.ewma + 0.1 * seconds)
+        if len(self._clean) >= self.warmup:
+            baseline = statistics.median(self._clean[-self.window:])
+            if seconds > self.threshold * baseline:
+                self.flagged.append((step, seconds))
+                return True
+        self._clean.append(seconds)
+        return False
+
+
+@dataclass
+class RestartPolicy:
+    max_restarts: int = 2
+    backoff_s: float = 0.0
+    restarts: int = 0
+    failures: list = field(default_factory=list)
+
+
+def run_supervised(loop, restore, policy: RestartPolicy):
+    """Run `loop(state)` under crash-restart supervision.
+
+    `restore()` produces the state to (re)start from — typically the latest
+    checkpoint. Re-raises once the restart budget is exhausted. Returns
+    (final_state, policy).
+    """
+    state = restore()
+    while True:
+        try:
+            return loop(state), policy
+        except Exception as e:  # noqa: BLE001 — any crash is restartable
+            policy.failures.append(repr(e))
+            policy.restarts += 1
+            if policy.restarts > policy.max_restarts:
+                raise
+            if policy.backoff_s:
+                time.sleep(policy.backoff_s * policy.restarts)
+            state = restore()

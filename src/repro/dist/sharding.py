@@ -1,0 +1,137 @@
+"""Logical-axis sharding: name -> mesh-axis resolution + constraint helpers.
+
+Models annotate arrays with *logical* axis names ("embed", "heads", ...);
+this module resolves them against a rule table and a mesh into concrete
+PartitionSpecs. Resolution is defensive so one rule table works across every
+(arch x shape x mesh) cell:
+
+- rules may map a name to one mesh axis, a tuple of axes, or None;
+- axes absent from the mesh are silently dropped (a "pod" rule is harmless
+  on a single-pod mesh);
+- an axis is never used twice within one array (first dim wins);
+- a dim that is not divisible by its axis-group product drops axes from the
+  end of the group until it is (jit requires even shards).
+
+`logical_constraint` is a no-op unless a `use_rules(mesh, rules)` context is
+active, so model code is importable and runnable with zero distribution
+setup (single-device tests, interpret-mode kernels).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Default logical-name -> mesh-axis rules (DESIGN.md §4). Names absent from
+# the table resolve to None (replicated); per-cell overrides come from
+# repro.launch.specs.rules_for and repro.dist.strategies.
+DEFAULT_RULES: dict = {
+    "batch": ("pod", "data"),
+    "embed": "data",             # FSDP: weights gathered over data
+    "mlp": "model",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": "model",          # EP when the expert count divides |model|
+    "expert_mlp": "model",       # expert-TP fallback when EP drops
+    "head_dim": None,
+    "seq": None,
+    "kv_seq": None,
+    "act_embed": None,
+    "layers": None,
+    "state": None,
+    "conv_kernel": None,
+}
+
+_SCALAR = "_scalar_"
+
+
+def _names_of(names):
+    """Normalize an axes annotation (tuple | 'a b _' string) to a tuple."""
+    if names is None:
+        return ()
+    if isinstance(names, str):
+        if names == _SCALAR:
+            return ()
+        return tuple(None if n == "_" else n for n in names.split())
+    return tuple(names)
+
+
+def resolve_spec(shape, names, mesh, rules) -> P:
+    """Resolve logical `names` for an array of `shape` to a PartitionSpec.
+
+    mesh only needs `.shape` (axis -> size mapping) and `.axis_names`.
+    """
+    names = _names_of(names)
+    rules = dict(DEFAULT_RULES, **rules)   # callers pass only overrides
+    mesh_axes = set(mesh.axis_names)
+    sizes = dict(mesh.shape)
+    claimed: set = set()
+    entries = []
+    for dim, name in zip(shape, names):
+        rule = rules.get(name) if name is not None else None
+        if rule is None:
+            entries.append(None)
+            continue
+        group = [rule] if isinstance(rule, str) else list(rule)
+        group = [a for a in group if a in mesh_axes and a not in claimed]
+        # jit needs even shards: shed axes from the end until divisible
+        while group and dim % math.prod(sizes[a] for a in group):
+            group.pop()
+        if not group:
+            entries.append(None)
+            continue
+        claimed.update(group)
+        entries.append(group[0] if len(group) == 1 else tuple(group))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sharding_tree(tree, axes, mesh, rules):
+    """Twin-pytree map: (arrays, axes-strings) -> NamedShardings."""
+    return jax.tree.map(
+        lambda leaf, ax: NamedSharding(
+            mesh, resolve_spec(getattr(leaf, "shape", ()), ax, mesh, rules)),
+        tree, axes)
+
+
+# --------------------------------------------------------------------------
+# in-jit constraints
+# --------------------------------------------------------------------------
+
+_ACTIVE = threading.local()
+
+
+@contextmanager
+def use_rules(mesh, rules):
+    """Activate (mesh, rules) for logical_constraint within this thread."""
+    stack = getattr(_ACTIVE, "stack", None)
+    if stack is None:
+        stack = _ACTIVE.stack = []
+    stack.append((mesh, rules))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def current_rules():
+    stack = getattr(_ACTIVE, "stack", None)
+    return stack[-1] if stack else None
+
+
+def logical_constraint(x, names):
+    """with_sharding_constraint by logical names; identity outside
+    a use_rules context or when the spec resolves to fully-replicated."""
+    active = current_rules()
+    if active is None:
+        return x
+    mesh, rules = active
+    spec = resolve_spec(x.shape, names, mesh, rules)
+    if spec == P():
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -69,10 +69,17 @@ def aggregate_packed(words2d, mask2d, *, code_bits: int,
                      block_rows: int = DEFAULT_BLOCK_ROWS,
                      interpret: bool = True):
     """(rows, 128) packed words + packed mask -> int32[1, 4] =
-    [sum, count, min, max]."""
+    [sum, count, min, max].
+
+    Rows are zero-padded to the block multiple; padded words carry zero
+    mask delimiter bits so they contribute nothing to any accumulator."""
     rows = words2d.shape[0]
     block_rows = min(block_rows, rows)
-    assert rows % block_rows == 0, (rows, block_rows)
+    pad = (-rows) % block_rows
+    if pad:
+        words2d = jnp.pad(words2d, ((0, pad), (0, 0)))
+        mask2d = jnp.pad(mask2d, ((0, pad), (0, 0)))
+        rows += pad
     vmax = (1 << (code_bits - 1)) - 1
     kernel = functools.partial(_agg_kernel, code_bits=code_bits, vmax=vmax)
     return pl.pallas_call(

@@ -1,25 +1,23 @@
-"""Public fused scan+aggregate API with jnp fallback."""
+"""Public fused scan+aggregate API, dispatched through
+repro.kernels.dispatch."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch, tune
 from repro.kernels.aggregate import kernel as K
 from repro.kernels.aggregate import ref
 from repro.kernels.scan_filter.kernel import DEFAULT_BLOCK_ROWS, LANES
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def aggregate(words, mask_words, code_bits: int, use_kernel: bool = True,
-              block_rows: int | None = None):
+              block_rows: int | None = None, mode=None):
     """words/mask_words: (n_words,) uint32 -> dict(sum, count, min, max).
 
     Codes in padded tail words have mask delimiter bits 0 and are ignored.
     """
-    if not use_kernel:
+    r = dispatch.resolve(mode, use_kernel=use_kernel)
+    if not r.use_pallas:
         return ref.aggregate_ref(words, mask_words, code_bits)
     w = jnp.asarray(words, jnp.uint32)
     m = jnp.asarray(mask_words, jnp.uint32)
@@ -27,10 +25,29 @@ def aggregate(words, mask_words, code_bits: int, use_kernel: bool = True,
     w = jnp.pad(w, (0, pad)).reshape(-1, LANES)
     m = jnp.pad(m, (0, pad)).reshape(-1, LANES)
     rows = w.shape[0]
-    br = block_rows or min(DEFAULT_BLOCK_ROWS, rows)
-    while rows % br:
-        br -= 1
+    br = block_rows
+    if br is None:
+        br = min(DEFAULT_BLOCK_ROWS, rows)
+        if r.tuned:
+            br = tune.best_params("aggregate",
+                                  tune.shape_key(rows=rows, bits=code_bits),
+                                  {"block_rows": br})["block_rows"]
+            br = max(1, min(int(br), rows))
     out = K.aggregate_packed(w, m, code_bits=code_bits, block_rows=br,
-                             interpret=_interpret())
+                             interpret=r.interpret)
     return {"sum": out[0, 0], "count": out[0, 1],
             "min": out[0, 2], "max": out[0, 3]}
+
+
+def _example(rng):
+    from repro.kernels.scan_filter import ref as scan_ref
+    codes = rng.integers(0, 128, 6000)
+    packed = scan_ref.pack(codes, 8)
+    mask = scan_ref.scan_ref(packed, 64, "lt", 8)
+    return (jnp.asarray(packed), mask, 8), {}
+
+
+dispatch.register(
+    "aggregate", fn=aggregate, ref=ref.aggregate_ref,
+    tunables={"block_rows": (64, 256, 1024, 4096, 16384)},
+    example=_example)

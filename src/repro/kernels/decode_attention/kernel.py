@@ -69,15 +69,20 @@ def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
 def decode_attention_fwd(q, k, v, q_pos, kv_pos, *, window: int = 0,
                          bk: int = DEFAULT_BK, interpret: bool = True):
-    """q: (B, KVH, G, D); k/v: (B, S, KVH, D) ring cache; q_pos: (B,);
-    kv_pos: (B, S) stored positions. Returns (B, KVH, G, D)."""
-    b, kvh, g, d = q.shape
-    s = k.shape[1]
+    """q: (B, KVH, G, D); k/v: (B, KVH, S, D) kernel-native ring cache;
+    q_pos: (B,); kv_pos: (B, S) stored positions. Returns (B, KVH, G, D).
+
+    The cache layout matches repro.models.attention storage exactly, so a
+    decode step feeds the cache straight in: the only reshape below merges
+    the two leading axes (a metadata-only view), never a transpose — the
+    whole-cache `swapaxes` copy this kernel used to make every step is
+    gone.
+    """
+    b, kvh, s, d = k.shape
+    g = q.shape[2]
     bk = min(bk, s)
     assert s % bk == 0, (s, bk)
 
-    kt = jnp.swapaxes(k, 1, 2)                   # (B, KVH, S, D)
-    vt = jnp.swapaxes(v, 1, 2)
     pos_b = jnp.broadcast_to(kv_pos[:, None, :], (b, 1, s))
 
     kernel = functools.partial(_decode_kernel, scale=d ** -0.5,
@@ -101,5 +106,5 @@ def decode_attention_fwd(q, k, v, q_pos, kv_pos, *, window: int = 0,
             pltpu.VMEM((g, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q_pos, q, kt.reshape(b * kvh, s, d), vt.reshape(b * kvh, s, d), pos_b)
+    )(q_pos, q, k.reshape(b * kvh, s, d), v.reshape(b * kvh, s, d), pos_b)
     return out

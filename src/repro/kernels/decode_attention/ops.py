@@ -1,25 +1,49 @@
-"""Public decode-attention API (inference-only; no vjp needed)."""
+"""Public decode-attention API (inference-only; no vjp needed), dispatched
+through repro.kernels.dispatch. k/v arrive in the kernel-native
+(B, KVH, S, D) cache layout — zero copies on the decode hot path."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch, tune
 from repro.kernels.decode_attention import kernel as K
 from repro.kernels.decode_attention import ref
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
-                     bk: int = K.DEFAULT_BK, use_kernel: bool = True):
-    """q: (B, KVH, G, D); k/v: (B, S, KVH, D); q_pos (B,); kv_pos (B, S)."""
-    if not use_kernel:
+                     bk: int | None = None, use_kernel: bool = True,
+                     mode=None):
+    """q: (B, KVH, G, D); k/v: (B, KVH, S, D); q_pos (B,); kv_pos (B, S)."""
+    r = dispatch.resolve(mode, use_kernel=use_kernel)
+    if not r.use_pallas:
         return ref.decode_ref(q, k, v, q_pos, kv_pos, window=window)
-    s = k.shape[1]
-    bk_eff = min(bk, s)
-    while s % bk_eff:
-        bk_eff -= 1
+    s = k.shape[2]
+    if bk is None:
+        bk = K.DEFAULT_BK
+        if r.tuned:
+            bk = tune.best_params("decode_attention", tune.shape_key(s=s),
+                                  {"bk": bk})["bk"]
     return K.decode_attention_fwd(q, k, v, q_pos, kv_pos, window=window,
-                                  bk=bk_eff, interpret=_interpret())
+                                  bk=tune.fit(s, bk), interpret=r.interpret)
+
+
+def _example(rng):
+    key = jax.random.PRNGKey(int(rng.integers(1 << 30)))
+    kq, kk, kv_ = jax.random.split(key, 3)
+    b, kvh, g, s, d = 2, 2, 2, 512, 64
+    q = jax.random.normal(kq, (b, kvh, g, d), jnp.float32)
+    k = jax.random.normal(kk, (b, kvh, s, d), jnp.float32)
+    v = jax.random.normal(kv_, (b, kvh, s, d), jnp.float32)
+    fill = int(0.75 * s)
+    kv_pos = jnp.broadcast_to(
+        jnp.where(jnp.arange(s) < fill, jnp.arange(s), 1 << 30)[None],
+        (b, s))
+    q_pos = jnp.full((b,), fill, jnp.int32)
+    return (q, k, v, q_pos, kv_pos), {}
+
+
+dispatch.register(
+    "decode_attention", fn=decode_attention, ref=ref.decode_ref,
+    tunables={"bk": (128, 256, 512, 1024, 2048)},
+    example=_example)

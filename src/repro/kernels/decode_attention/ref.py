@@ -1,9 +1,9 @@
 """Pure-jnp oracle for split-K decode attention.
 
-One query token per row against a ring-buffer KV cache with a stored-pos
-plane (repro.models.attention cache layout): slots whose pos violates
-causality (or the sliding window, or were never written = +INF pos) are
-masked.
+One query token per row against a ring-buffer KV cache in the kernel-native
+(B, KVH, S, D) layout with a stored-pos plane (repro.models.attention cache
+layout): slots whose pos violates causality (or the sliding window, or were
+never written = +INF pos) are masked.
 """
 from __future__ import annotations
 
@@ -14,10 +14,10 @@ NEG_INF = -1e30
 
 
 def decode_ref(q, k, v, q_pos, kv_pos, *, window: int = 0):
-    """q: (B, KVH, G, D); k/v: (B, S, KVH, D); q_pos: (B,);
+    """q: (B, KVH, G, D); k/v: (B, KVH, S, D); q_pos: (B,);
     kv_pos: (B, S). Returns (B, KVH, G, D)."""
     d = q.shape[-1]
-    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32) * d ** -0.5,
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32) * d ** -0.5,
                    k.astype(jnp.float32))
     dp = q_pos[:, None] - kv_pos                     # (B, S)
     ok = dp >= 0
@@ -25,5 +25,5 @@ def decode_ref(q, k, v, q_pos, kv_pos, *, window: int = 0):
         ok &= dp < window
     s = jnp.where(ok[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bkgs,bskd->bkgd", p,
+    return jnp.einsum("bkgs,bksd->bkgd", p,
                       v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,104 @@
+"""Unified kernel dispatch: one mode switch + registry for all families.
+
+Every kernel family used to carry its own copy-pasted `_interpret()` probe
+and `use_kernel` flag; this module centralizes that decision behind
+`KernelMode` (the mamba-jax interface idiom) and keeps a registry of the
+public ops so tests/tools can enumerate and parity-check every family
+without knowing the packages:
+
+- PALLAS:  always run the Pallas kernel (interpret mode off-TPU, compiled
+           on TPU).
+- XLA_REF: the pure-jnp oracle (ref.py) — differentiable, any backend.
+- AUTO:    Pallas with autotuned block sizes (repro.kernels.tune); today
+           resolves to PALLAS everywhere, and is the hook where future
+           shape-based fallbacks live.
+
+Ops accept `mode=` (str or KernelMode) plus the legacy `use_kernel=` bool
+(False => XLA_REF) so existing call sites keep working.
+"""
+from __future__ import annotations
+
+import enum
+import importlib
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping
+
+import jax
+
+
+class KernelMode(enum.Enum):
+    PALLAS = "pallas"
+    XLA_REF = "xla_ref"
+    AUTO = "auto"
+
+
+@dataclass(frozen=True)
+class Resolved:
+    """A concrete dispatch decision for one call."""
+    use_pallas: bool
+    interpret: bool
+    tuned: bool        # consult the tune cache for block sizes
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve(mode: KernelMode | str | None = None, *,
+            use_kernel: bool = True) -> Resolved:
+    """Collapse (mode, legacy use_kernel) into a Resolved decision."""
+    if not use_kernel:
+        mode = KernelMode.XLA_REF
+    mode = KernelMode(mode) if mode is not None else KernelMode.AUTO
+    if mode is KernelMode.XLA_REF:
+        return Resolved(use_pallas=False, interpret=False, tuned=False)
+    return Resolved(use_pallas=True, interpret=not on_tpu(),
+                    tuned=mode is KernelMode.AUTO)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KernelOp:
+    """One registered kernel family.
+
+    fn/ref share the public signature; `fn` additionally accepts `mode=`.
+    `example(rng)` returns (args, kwargs) exercising the op for parity and
+    autotune sweeps. `tunables` maps block-size kwarg -> candidate values.
+    """
+    name: str
+    fn: Callable
+    ref: Callable
+    tunables: Mapping[str, tuple]
+    example: Callable[[Any], tuple]
+
+
+_REGISTRY: dict[str, KernelOp] = {}
+
+_OP_MODULES = ("scan_filter", "aggregate", "flash_attention",
+               "decode_attention", "ssd_chunk")
+
+
+def register(name: str, *, fn, ref, tunables=None, example=None) -> KernelOp:
+    op = KernelOp(name=name, fn=fn, ref=ref,
+                  tunables=dict(tunables or {}), example=example)
+    _REGISTRY[name] = op
+    return op
+
+
+def ensure_registered() -> None:
+    """Import every kernel family so module-level register() calls ran."""
+    for mod in _OP_MODULES:
+        importlib.import_module(f"repro.kernels.{mod}.ops")
+
+
+def get(name: str) -> KernelOp:
+    ensure_registered()
+    return _REGISTRY[name]
+
+
+def registered() -> dict[str, KernelOp]:
+    ensure_registered()
+    return dict(_REGISTRY)

@@ -45,11 +45,17 @@ def scan_packed(words2d, constant: int, *, op: str, code_bits: int,
                 block_rows: int = DEFAULT_BLOCK_ROWS,
                 interpret: bool = True):
     """words2d: (rows, 128) uint32 packed codes. Returns packed delimiter
-    mask words of the same shape. `op` is a kernel primitive: ge | eq."""
+    mask words of the same shape. `op` is a kernel primitive: ge | eq.
+
+    Arbitrary row counts are supported: rows are zero-padded up to the next
+    block multiple and the pad is sliced off the output."""
     rows = words2d.shape[0]
     assert words2d.shape[1] == LANES, words2d.shape
     block_rows = min(block_rows, rows)
-    assert rows % block_rows == 0, (rows, block_rows)
+    pad = (-rows) % block_rows
+    if pad:
+        words2d = jnp.pad(words2d, ((0, pad), (0, 0)))
+    grid_rows = rows + pad
     delim, low, value = field_masks(code_bits)
     c = 32 // code_bits
     const_packed = 0
@@ -59,11 +65,12 @@ def scan_packed(words2d, constant: int, *, op: str, code_bits: int,
     kernel = functools.partial(_scan_kernel, op=op,
                                const_packed=const_packed,
                                delim=int(delim), low=int(low))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(rows // block_rows,),
+        grid=(grid_rows // block_rows,),
         in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((grid_rows, LANES), jnp.uint32),
         interpret=interpret,
     )(words2d)
+    return out[:rows] if pad else out

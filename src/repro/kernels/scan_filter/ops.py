@@ -1,17 +1,13 @@
 """Public scan-filter API: all six predicates composed from the kernel's
-{ge, eq} primitives, with a jnp fallback and automatic interpret mode."""
+{ge, eq} primitives, dispatched through repro.kernels.dispatch."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch, tune
 from repro.kernels.scan_filter import kernel as K
 from repro.kernels.scan_filter import ref
 from repro.kernels.scan_filter.ref import OPS, field_masks
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _to_2d(words):
@@ -21,8 +17,19 @@ def _to_2d(words):
     return w.reshape(-1, K.LANES), n
 
 
+def _block_rows(rows: int, code_bits: int, tuned: bool) -> int:
+    default = min(K.DEFAULT_BLOCK_ROWS, rows)
+    if not tuned:
+        return default
+    got = tune.best_params("scan_filter",
+                           tune.shape_key(rows=rows, bits=code_bits),
+                           {"block_rows": default})["block_rows"]
+    return max(1, min(int(got), rows))
+
+
 def scan_filter(words, constant: int, op: str, code_bits: int,
-                block_rows: int | None = None, use_kernel: bool = True):
+                block_rows: int | None = None, use_kernel: bool = True,
+                mode=None):
     """words: (n_words,) uint32 packed codes -> (n_words,) packed mask.
 
     Composition rules (payload max = 2^(bits-1) - 1):
@@ -30,18 +37,16 @@ def scan_filter(words, constant: int, op: str, code_bits: int,
       ne = ~eq.
     """
     assert op in OPS, op
-    if not use_kernel:
+    r = dispatch.resolve(mode, use_kernel=use_kernel)
+    if not r.use_pallas:
         return ref.scan_ref(words, constant, op, code_bits)
 
     delim, _, value = field_masks(code_bits)
     vmax = int(value)
     w2d, n = _to_2d(jnp.asarray(words, jnp.uint32))
-    rows = w2d.shape[0]
-    br = block_rows or min(K.DEFAULT_BLOCK_ROWS, rows)
-    while rows % br:
-        br -= 1
+    br = block_rows or _block_rows(w2d.shape[0], code_bits, r.tuned)
     run = lambda c, o: K.scan_packed(w2d, c, op=o, code_bits=code_bits,
-                                     block_rows=br, interpret=_interpret())
+                                     block_rows=br, interpret=r.interpret)
     dm = jnp.uint32(delim)
     c = int(constant)
     if op == "ge":
@@ -59,3 +64,14 @@ def scan_filter(words, constant: int, op: str, code_bits: int,
         out = ~run(c, "eq") & dm
 
     return out.reshape(-1)[:n]
+
+
+def _example(rng):
+    codes = rng.integers(0, 128, 4096)
+    return (jnp.asarray(ref.pack(codes, 8)), 64, "lt", 8), {}
+
+
+dispatch.register(
+    "scan_filter", fn=scan_filter, ref=ref.scan_ref,
+    tunables={"block_rows": (64, 256, 1024, 4096, 16384, 65536)},
+    example=_example)

@@ -1,18 +1,16 @@
-"""Public SSD-scan API: model-layout adapter over the chunk kernel."""
+"""Public SSD-scan API: model-layout adapter over the chunk kernel,
+dispatched through repro.kernels.dispatch."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.ssd_chunk import kernel as K
 from repro.kernels.ssd_chunk import ref
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def ssd(x, dt, a_log, b, c, chunk: int, use_kernel: bool = True):
+def ssd(x, dt, a_log, b, c, chunk: int, use_kernel: bool = True, mode=None):
     """Model layout: x (B, S, H, P); dt (B, S, H) fp32 post-softplus;
     a_log (H,); b/c (B, S, N) (groups=1, broadcast over heads).
     Returns (y (B, S, H, P), final_state (B, H, N, P))."""
@@ -32,11 +30,12 @@ def ssd(x, dt, a_log, b, c, chunk: int, use_kernel: bool = True):
             t = jnp.moveaxis(t, 2, 1)
         return t.reshape(bsz * h, nc, chunk, -1)
 
-    if not use_kernel:
+    r = dispatch.resolve(mode, use_kernel=use_kernel)
+    if not r.use_pallas:
         ys, hs = [], []
         for bi in range(bsz):
-            y_rows, h_rows = [], []
             h_state = jnp.zeros((h, n, p), jnp.float32)
+            y_rows = []
             for ci in range(nc):
                 sl = slice(ci * chunk, (ci + 1) * chunk)
                 y_c, h_state = ref.ssd_chunk_ref(
@@ -49,6 +48,26 @@ def ssd(x, dt, a_log, b, c, chunk: int, use_kernel: bool = True):
 
     y, hout = K.ssd_scan(to_bh(x, p), to_bh(dt, 1), to_bh(la, 1),
                          to_bh(b, n), to_bh(c, n),
-                         interpret=_interpret())
+                         interpret=r.interpret)
     y = y.reshape(bsz, h, s, p)
     return jnp.moveaxis(y, 1, 2), hout.reshape(bsz, h, n, p)
+
+
+def _example(rng):
+    key = jax.random.PRNGKey(int(rng.integers(1 << 30)))
+    ks = jax.random.split(key, 5)
+    bsz, s, h, p, n, chunk = 2, 64, 2, 16, 8, 16
+    x = jax.random.normal(ks[0], (bsz, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, h), jnp.float32))
+    a_log = jax.random.normal(ks[2], (h,), jnp.float32) * 0.1
+    b = jax.random.normal(ks[3], (bsz, s, n), jnp.float32)
+    c = jax.random.normal(ks[4], (bsz, s, n), jnp.float32)
+    return (x, dt, a_log, b, c, 16), {}
+
+
+def _ssd_ref(x, dt, a_log, b, c, chunk, **kw):
+    return ssd(x, dt, a_log, b, c, chunk, use_kernel=False)
+
+
+dispatch.register("ssd_chunk", fn=ssd, ref=_ssd_ref, tunables={},
+                  example=_example)

@@ -3,7 +3,23 @@ touches jax device state)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; plain meshes behave identically
+    from jax.sharding import AxisType
+    _AXIS_KW = lambda n: {"axis_types": (AxisType.Auto,) * n}
+except ImportError:
+    _AXIS_KW = lambda n: {}
+
+
+def _make(shape, axes):
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes, **_AXIS_KW(len(axes)))
+    import math
+
+    import numpy as np
+    from jax.sharding import Mesh
+    n = math.prod(shape)
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -11,11 +27,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     leading "pod" axis (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/examples (host devices or real)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make(tuple(shape), tuple(axes))

@@ -12,6 +12,12 @@ stored-position plane driving the causal/window mask (slots never written
 hold pos = +INF_POS and are therefore masked). Full-attention caches size the
 ring to max_len so nothing is ever evicted; sliding-window caches size it to
 the window.
+
+K/V are stored in the kernel-native (B, KVH, S, D) layout — exactly what
+the split-K decode kernel streams — so a decode step hands the cache to the
+kernel without any transpose/copy of the full ring (only the one new token
+is transposed on write). The naive/blockwise reference paths transpose on
+read; they exist for testing and tiny shapes, not the serving hot path.
 """
 from __future__ import annotations
 
@@ -154,7 +160,8 @@ def attend(params, x, positions, cfg, *, window: int = 0, impl: str = "auto",
     new_cache = fill_cache(kv_cache, k, v, positions)
     if impl == "flash":
         # one-token decode goes to the split-K Pallas kernel (ring-buffer
-        # aware via the stored-pos plane)
+        # aware via the stored-pos plane); the cache is already in the
+        # kernel's layout so nothing is transposed or copied here.
         from repro.kernels.decode_attention import ops as dec_ops
         o = dec_ops.decode_attention(
             q[:, 0], new_cache["k"], new_cache["v"], positions[:, 0],
@@ -163,7 +170,8 @@ def attend(params, x, positions, cfg, *, window: int = 0, impl: str = "auto",
                          o.reshape(b, sq, cfg.num_heads, hd).astype(x.dtype),
                          params["wo"])
         return out, new_cache
-    o = _run(q, new_cache["k"], new_cache["v"], positions, new_cache["pos"],
+    o = _run(q, jnp.swapaxes(new_cache["k"], 1, 2),
+             jnp.swapaxes(new_cache["v"], 1, 2), positions, new_cache["pos"],
              window, impl)
     out = jnp.einsum("bsnh,nhd->bsd",
                      o.reshape(b, sq, cfg.num_heads, hd).astype(x.dtype),
@@ -173,27 +181,33 @@ def attend(params, x, positions, cfg, *, window: int = 0, impl: str = "auto",
 
 def fill_cache(cache, k, v, positions):
     """Write K/V at ring slots position %% size (last-size slice if the
-    segment is longer than the ring)."""
-    size = cache["k"].shape[1]
+    segment is longer than the ring).
+
+    k/v arrive in model layout (B, Sq, KVH, D) — only this new segment is
+    transposed into the cache's kernel-native (B, KVH, S, D) layout; the
+    resident ring is scattered into, never rewritten."""
+    size = cache["k"].shape[2]
     if k.shape[1] > size:
         k, v, positions = k[:, -size:], v[:, -size:], positions[:, -size:]
-    b = k.shape[0]
-    slots = positions % size
-    bidx = jnp.arange(b)[:, None]
+    b, kvh = k.shape[0], k.shape[2]
+    slots = positions % size                     # (B, Sq)
+    bidx = jnp.arange(b)[:, None, None]          # (B, 1, 1)
+    hidx = jnp.arange(kvh)[None, :, None]        # (1, KVH, 1)
+    sidx = slots[:, None, :]                     # (B, 1, Sq)
     return {
-        "k": cache["k"].at[bidx, slots].set(k),
-        "v": cache["v"].at[bidx, slots].set(v),
-        "pos": cache["pos"].at[bidx, slots].set(positions),
+        "k": cache["k"].at[bidx, hidx, sidx].set(jnp.swapaxes(k, 1, 2)),
+        "v": cache["v"].at[bidx, hidx, sidx].set(jnp.swapaxes(v, 1, 2)),
+        "pos": cache["pos"].at[jnp.arange(b)[:, None], slots].set(positions),
     }
 
 
 def init_cache(cfg, batch: int, size: int, dtype):
     hd = cfg.resolved_head_dim
-    shape = (batch, size, cfg.num_kv_heads, hd)
+    shape = (batch, cfg.num_kv_heads, size, hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
             "pos": jnp.full((batch, size), INF_POS, jnp.int32)}
 
 
-CACHE_AXES = {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
-              "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+CACHE_AXES = {"k": ("batch", "kv_heads", "kv_seq", "head_dim"),
+              "v": ("batch", "kv_heads", "kv_seq", "head_dim"),
               "pos": ("batch", "kv_seq")}

@@ -7,6 +7,7 @@ bandwidth-bound regime the analytical model provisions for (DESIGN.md §2).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -14,7 +15,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.models.attention import INF_POS
 from repro.models.common import axes_names, dtype_of
+
+
+def bucket_len(n: int, lo: int = 8) -> int:
+    """Next power of two >= n (floored at lo): prefill retraces per bucket,
+    not per distinct prompt length."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 def make_prefill_step(cfg):
@@ -65,6 +76,13 @@ class ServeEngine:
     Fixed B decode slots with per-slot cache_len; a finished slot is refilled
     by prefilling the new request's prompt in a 1-row cache and inserting
     that row into the batch cache at the slot's batch index.
+
+    Slot/length bookkeeping lives in a host-side numpy mirror so the step
+    loop never blocks on a device sync per slot: the only forced transfer
+    per decode step is the sampled tokens themselves. Prompts are padded to
+    power-of-two buckets (attention-only stacks: padded ring slots are
+    re-marked never-written via the pos plane) so `_prefill1` compiles once
+    per bucket instead of once per distinct prompt length.
     """
 
     def __init__(self, cfg, params, *, batch_slots: int = 4,
@@ -75,20 +93,36 @@ class ServeEngine:
         dt = dtype_of(cfg.dtype)
         self.caches, self.cache_axes = lm.init_caches(cfg, batch_slots,
                                                       max_len, dt)
-        self.cache_len = jnp.zeros((batch_slots,), jnp.int32)
+        # host-side mirror: authoritative, device copy derives from it
+        self.cache_len = np.zeros((batch_slots,), np.int32)
         self.slots: list[Request | None] = [None] * batch_slots
         self.key = jax.random.PRNGKey(seed)
         self._serve = jax.jit(make_serve_step(cfg))
         self._prefill1 = jax.jit(self._prefill_row)
         self._insert = jax.jit(self._insert_row)
+        # recurrent (ssd/rglru) states carry real content at padded steps,
+        # so only pure-attention stacks can bucket prompt lengths
+        self._bucket = all(k == "attn" for k in cfg.block_pattern)
 
     # --- row-isolated prefill + insertion ---------------------------------
-    def _prefill_row(self, params, tokens):
-        caches1, _ = lm.init_caches(self.cfg, 1, self.max_len,
-                                    dtype_of(self.cfg.dtype))
+    def _prefill_row(self, params, tokens, length):
+        caches1, axes1 = lm.init_caches(self.cfg, 1, self.max_len,
+                                        dtype_of(self.cfg.dtype))
         logits, caches1, _ = lm.prefill(params, self.cfg, tokens[None],
                                         caches1)
-        return logits[0, -1], caches1
+
+        def mask_pad(c, a):
+            # ring slots written by pad tokens revert to never-written
+            if axes_names(a)[-1:] == ["kv_seq"] and c.dtype == jnp.int32:
+                slot = jnp.arange(c.shape[-1], dtype=jnp.int32)
+                return jnp.where(slot < length, c, INF_POS)
+            return c
+
+        if tokens.shape[0] > 1:   # padded bucket: mask the pos planes
+            caches1 = jax.tree.map(mask_pad, caches1, axes1)
+        last = jax.lax.dynamic_index_in_dim(logits[0], length - 1,
+                                            keepdims=False)
+        return last, caches1
 
     def _insert_row(self, caches, row_caches, slot):
         def f(c, a, r):
@@ -102,10 +136,20 @@ class ServeEngine:
         for i, s in enumerate(self.slots):
             if s is None:
                 self.slots[i] = req
-                prompt = jnp.asarray(req.prompt, jnp.int32)
-                logits, row = self._prefill1(self.params, prompt)
-                self.caches = self._insert(self.caches, row, i)
-                self.cache_len = self.cache_len.at[i].set(len(req.prompt))
+                n = len(req.prompt)
+                # never pad past the ring: pad positions would wrap and
+                # evict real prompt K/V that mask_pad (slot-indexed)
+                # cannot revert
+                padded = (min(bucket_len(n), self.max_len)
+                          if self._bucket and n <= self.max_len else n)
+                prompt = np.zeros((padded,), np.int32)
+                prompt[:n] = np.asarray(req.prompt, np.int32)
+                logits, row = self._prefill1(
+                    self.params, jnp.asarray(prompt),
+                    jnp.asarray(n, jnp.int32))
+                self.caches = self._insert(self.caches, row,
+                                           jnp.asarray(i, jnp.int32))
+                self.cache_len[i] = n
                 req.generated.append(int(jnp.argmax(logits)))
                 return True
         return False
@@ -118,7 +162,7 @@ class ServeEngine:
         for i in list(active):
             r = self.slots[i]
             if len(r.generated) >= r.max_new_tokens \
-                    or int(self.cache_len[i]) >= self.max_len - 1:
+                    or self.cache_len[i] >= self.max_len - 1:
                 r.done = True
                 finished.append(r)
                 self.slots[i] = None
@@ -129,23 +173,25 @@ class ServeEngine:
         for i in active:
             last[i, 0] = self.slots[i].generated[-1]
         self.key, sub = jax.random.split(self.key)
+        # hand jax a copy it owns: on CPU, jnp.asarray can alias numpy
+        # memory zero-copy, and the host mirror is mutated below while the
+        # async step may still be reading it
         nxt, _, self.caches = self._serve(
-            self.params, jnp.asarray(last), self.cache_len, self.caches, sub)
-        mask = np.zeros((self.B,), np.int32)
+            self.params, jnp.asarray(last), jnp.asarray(self.cache_len.copy()),
+            self.caches, sub)
         for i in active:
-            mask[i] = 1
-        self.cache_len = self.cache_len + jnp.asarray(mask)
-        nxt = np.asarray(nxt)
+            self.cache_len[i] += 1
+        nxt = np.asarray(nxt)            # the step's one device sync
         for i in active:
             self.slots[i].generated.append(int(nxt[i]))
         return finished
 
     def run(self, requests):
         """Drive a list of requests to completion; returns them."""
-        queue = list(requests)
+        queue = deque(requests)
         done = []
         while queue or any(s is not None for s in self.slots):
             while queue and self.submit(queue[0]):
-                queue.pop(0)
+                queue.popleft()
             done.extend(self.step())
         return done

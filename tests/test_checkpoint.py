@@ -66,11 +66,12 @@ def test_async_save(tmp_path):
 def test_elastic_restore_reshard(tmp_path):
     """Restore with explicit NamedShardings (the re-mesh path)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
     mgr = CheckpointManager(tmp_path)
     tree = make_tree()
     mgr.save(1, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
     restored, _ = mgr.restore(tree, shardings=shardings)
     assert_tree_equal(tree, restored)

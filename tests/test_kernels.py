@@ -163,8 +163,8 @@ def test_decode_matches_ref(dtype, b, kvh, g, s, d):
     key = jax.random.PRNGKey(0)
     kq, kk, kv_, kp = jax.random.split(key, 4)
     q = jax.random.normal(kq, (b, kvh, g, d), jnp.float32).astype(dtype)
-    k = jax.random.normal(kk, (b, s, kvh, d), jnp.float32).astype(dtype)
-    v = jax.random.normal(kv_, (b, s, kvh, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, kvh, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv_, (b, kvh, s, d), jnp.float32).astype(dtype)
     fill = int(0.75 * s)
     kv_pos = jnp.where(jnp.arange(s)[None, :] < fill,
                        jnp.arange(s)[None, :], 1 << 30)
@@ -182,8 +182,8 @@ def test_decode_sliding_window_ring(window):
     b, kvh, g, s, d = 1, 1, 2, 256, 64
     key = jax.random.PRNGKey(5)
     q = jax.random.normal(key, (b, kvh, g, d), jnp.float32)
-    k = jax.random.normal(key, (b, s, kvh, d), jnp.float32)
-    v = jax.random.normal(key, (b, s, kvh, d), jnp.float32)
+    k = jax.random.normal(key, (b, kvh, s, d), jnp.float32)
+    v = jax.random.normal(key, (b, kvh, s, d), jnp.float32)
     # cache holds positions 300-555 in ring layout (wrapped)
     abs_pos = jnp.arange(300, 300 + s)
     slots = abs_pos % s
@@ -199,8 +199,8 @@ def test_decode_split_sizes_agree():
     b, kvh, g, s, d = 1, 2, 2, 1024, 128
     key = jax.random.PRNGKey(6)
     q = jax.random.normal(key, (b, kvh, g, d), jnp.float32)
-    k = jax.random.normal(key, (b, s, kvh, d), jnp.float32)
-    v = jax.random.normal(key, (b, s, kvh, d), jnp.float32)
+    k = jax.random.normal(key, (b, kvh, s, d), jnp.float32)
+    v = jax.random.normal(key, (b, kvh, s, d), jnp.float32)
     kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     q_pos = jnp.full((b,), s - 1, jnp.int32)
     a = dec_ops.decode_attention(q, k, v, q_pos, kv_pos, bk=256)

@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (BIG_MEMORY, DIE_STACKED, TRADITIONAL, Workload,

@@ -62,3 +62,13 @@ def test_slot_reuse(setup):
     done = eng.run([Request(rid=i, prompt=np.array([i + 1], np.int32),
                             max_new_tokens=2) for i in range(3)])
     assert len(done) == 3
+
+
+def test_prefill_bucket_clamped_to_ring(setup):
+    """A prompt whose pow2 bucket exceeds max_len must not wrap the ring
+    (pad writes would evict real prompt K/V): bucket_len(40)=64 > 48."""
+    cfg, params = setup
+    prompt = (np.arange(1, 41, dtype=np.int32) % cfg.vocab_size)
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=48)
+    [done] = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=4)])
+    assert done.generated == naive_greedy(cfg, params, prompt, 4)
