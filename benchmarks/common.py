@@ -1,11 +1,25 @@
-"""Benchmark harness plumbing: timing + CSV row emission.
+"""Benchmark harness plumbing: timing, CSV rows, trajectory files.
 
 Contract: every benchmark module exposes `rows() -> list[tuple]` of
 (name, us_per_call, derived) and run.py prints them all as CSV.
 """
 from __future__ import annotations
 
+import json
 import time
+
+
+def append_trajectory(path, rec: dict) -> None:
+    """Append one run's record to a BENCH_*.json trajectory file (a JSON
+    list future PRs diff against to catch regressions)."""
+    try:
+        hist = json.loads(path.read_text())
+        if not isinstance(hist, list):
+            hist = []
+    except (OSError, ValueError):
+        hist = []
+    hist.append(rec)
+    path.write_text(json.dumps(hist, indent=1))
 
 
 def timed(fn, *args, repeat: int = 5, **kw):

@@ -13,7 +13,6 @@ TPU; the jnp fallback row is kept as the hardware-bandwidth reference
 """
 from __future__ import annotations
 
-import json
 import time
 from pathlib import Path
 
@@ -21,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timed
+from benchmarks.common import append_trajectory, timed
 from repro.db import Predicate, Table, scan_aggregate_query
 from repro.kernels import dispatch, tune
 from repro.kernels.scan_filter import kernel as K
@@ -29,17 +28,6 @@ from repro.kernels.scan_filter import ops as scan_ops
 from repro.kernels.scan_filter import ref as scan_ref
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
-
-
-def _record(rec: dict) -> None:
-    """Append one run to the BENCH_kernels.json trajectory."""
-    try:
-        hist = json.loads(BENCH_PATH.read_text())
-        assert isinstance(hist, list)
-    except (OSError, ValueError, AssertionError):
-        hist = []
-    hist.append(rec)
-    BENCH_PATH.write_text(json.dumps(hist, indent=1))
 
 
 def _scan_gbps(w2d, block_rows: int, interpret: bool) -> float:
@@ -87,7 +75,7 @@ def rows():
     # --- hardware-bandwidth reference: the jnp fallback path -------------
     def scan_ref_path():
         return scan_ops.scan_filter(packed, 64, "lt", 8,
-                                    use_kernel=False).block_until_ready()
+                                    mode="xla_ref").block_until_ready()
 
     _, us = timed(scan_ref_path)
     gbps = packed.nbytes / (us / 1e6) / 1e9
@@ -95,7 +83,7 @@ def rows():
     out.append(("kernels/scan8b/intensity", 0.0,
                 "3int_ops_per_4B_word(bandwidth-bound)"))
 
-    _record({
+    append_trajectory(BENCH_PATH, {
         "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
         "op": "scan_filter",
@@ -113,7 +101,7 @@ def rows():
 
     def q():
         r = scan_aggregate_query(t, [Predicate("a", "lt", 64)], "b",
-                                 use_kernel=False)
+                                 mode="xla_ref")
         jax.block_until_ready(r["sum"])
         return r
 

@@ -22,6 +22,7 @@ MODULES = (
     "benchmarks.crossover",
     "benchmarks.advisor_tpu",
     "benchmarks.kernels_bench",
+    "benchmarks.queries_bench",
     "benchmarks.roofline_table",
 )
 

@@ -12,6 +12,7 @@ collective roofline term (which the paper ignored, §6.2) layered on top.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 from repro.configs.base import ArchConfig
@@ -81,6 +82,44 @@ def advise_capacity(cfg: ArchConfig, batch: int, seq_len: int,
     sys_ = system or as_paper_system(TPU_V5E)
     wl = lm_decode_workload(cfg, batch, seq_len)
     return Advice(provision_capacity(sys_, wl), "capacity_b", wl.db_size)
+
+
+def scan_workload(db_bytes: float, bytes_scanned: float) -> Workload:
+    """The paper's (db_size, percent accessed) measured by the query engine
+    rather than assumed: db = the table's packed footprint, percent = the
+    fraction one query actually streams."""
+    if db_bytes <= 0:
+        raise ValueError(f"db_bytes={db_bytes} must be positive")
+    return Workload(db_size=db_bytes,
+                    percent_accessed=min(bytes_scanned / db_bytes, 1.0))
+
+
+def calibrated_system(system: SystemSpec,
+                      measured_chip_bps: float) -> SystemSpec:
+    """Feed Eq. 4 with *attained* per-chip scan throughput: core_perf is
+    rescaled so max_cores * core_perf equals the measured rate. Provisioning
+    a cluster from this spec answers the paper's question for the system we
+    actually built, not the datasheet."""
+    if measured_chip_bps <= 0:
+        raise ValueError(
+            f"measured_chip_bps={measured_chip_bps} must be positive; run "
+            f"at least one query before calibrating")
+    return dataclasses.replace(
+        system, name=f"{system.name}-measured",
+        core_perf=measured_chip_bps / system.max_chip_cores)
+
+
+def advise_scan_sla(db_bytes: float, bytes_per_query: float, sla_s: float,
+                    system: SystemSpec | None = None,
+                    measured_chip_bps: float | None = None) -> Advice:
+    """Chips needed so one scan query meets `sla_s`, optionally from the
+    query engine's measured per-chip throughput (the model-vs-measured
+    loop)."""
+    sys_ = system or as_paper_system(TPU_V5E)
+    if measured_chip_bps is not None:
+        sys_ = calibrated_system(sys_, measured_chip_bps)
+    wl = scan_workload(db_bytes, bytes_per_query)
+    return Advice(provision_performance(sys_, wl, sla_s), "sla_s", sla_s)
 
 
 def when_to_use_tpu(cfg: ArchConfig, batch: int, seq_len: int,

@@ -1,4 +1,8 @@
-"""In-memory analytic DB substrate (the paper's workload)."""
+"""In-memory analytic DB substrate (the paper's workload).
+
+Storage lives here (bit-packed columns, tables); execution lives in
+repro.query (plans, sharding, the SLA-aware engine).
+"""
 from repro.db.columnar import BitPackedColumn, Table
 from repro.db.queries import Predicate, scan_aggregate_query
 

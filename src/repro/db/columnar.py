@@ -22,17 +22,42 @@ class BitPackedColumn:
     num_rows: int
     words: jnp.ndarray                 # (n_words,) uint32
     dictionary: np.ndarray | None = None   # code -> value (optional)
+    _valid: jnp.ndarray | None = field(default=None, repr=False,
+                                       compare=False)
 
     @classmethod
     def from_values(cls, name: str, values, code_bits: int,
                     dictionary=None) -> "BitPackedColumn":
         values = np.asarray(values)
+        if code_bits not in (2, 4, 8, 16):
+            raise ValueError(
+                f"column {name!r}: code_bits={code_bits} unsupported; must "
+                f"be 2, 4, 8, or 16 (fields divide the 32-bit word, and "
+                f"exact aggregation needs payloads < 2^16)")
         vmax = (1 << (code_bits - 1)) - 1
+        if values.min(initial=0) < 0:
+            raise ValueError(
+                f"column {name!r}: negative codes; dictionary codes are "
+                f"unsigned indices")
         if values.max(initial=0) > vmax:
-            raise ValueError(f"codes exceed {code_bits}-bit payload")
+            raise ValueError(
+                f"column {name!r}: codes exceed the {code_bits}-bit payload "
+                f"max {vmax} (the delimiter MSB must stay 0); widen "
+                f"code_bits or re-encode the dictionary")
         words = packref.pack(values, code_bits)
         return cls(name, code_bits, len(values), jnp.asarray(words),
                    None if dictionary is None else np.asarray(dictionary))
+
+    @property
+    def valid_words(self) -> jnp.ndarray:
+        """Packed delimiter-bit mask set only for real rows: cancels the
+        pack()-to-a-word-multiple tail padding during query evaluation
+        (cached — reused by every query touching this column)."""
+        if self._valid is None:
+            total = int(self.words.size) * self.codes_per_word
+            self._valid = jnp.asarray(packref.pack_mask(
+                np.arange(total) < self.num_rows, self.code_bits))
+        return self._valid
 
     @property
     def codes_per_word(self) -> int:

@@ -1,64 +1,46 @@
-"""Scan + aggregate query plans over the bit-packed store.
+"""Legacy scan/aggregate entry points over the bit-packed store.
 
-WideTable's observation (Li & Patel, VLDB'14): most analytic queries reduce
-to conjunctive predicate scans followed by aggregates. A query here is a
-list of Predicates ANDed together (masks combined word-wise) feeding a
-fused masked aggregate — exactly the operator mix the paper's `core_perf`
-models, now running through the Pallas kernels.
+The seed's ad-hoc single-device functions grew into the repro.query engine
+(logical Pred/And/Or plans -> kernel-dispatch physical operators, row-wise
+sharding, SLA-batched execution); these wrappers keep the original call
+signatures and route through that same execution path, so there is exactly
+one way a scan runs. Kernel selection is a dispatch `mode=`
+(KernelMode.PALLAS | XLA_REF | AUTO) — the `use_kernel=` booleans are gone.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-
-import jax.numpy as jnp
-
 from repro.db.columnar import Table
-from repro.kernels.aggregate import ops as agg_ops
-from repro.kernels.scan_filter import ops as scan_ops
-from repro.kernels.scan_filter.ref import OPS
+from repro.query import physical
+from repro.query.plan import Predicate, normalize
 
 
-@dataclass(frozen=True)
-class Predicate:
-    column: str
-    op: str          # lt | le | gt | ge | eq | ne
-    constant: int
-
-    def __post_init__(self):
-        assert self.op in OPS, self.op
-
-
-def scan_query(table: Table, predicates: list[Predicate],
-               use_kernel: bool = True):
-    """Conjunctive scan -> packed selection mask (delimiter-bit layout of
-    the first predicate's column)."""
-    assert predicates, "need at least one predicate"
-    bits = {table.columns[p.column].code_bits for p in predicates}
-    assert len(bits) == 1, "conjunction across widths: repack first"
-    mask = None
-    for p in predicates:
-        col = table.columns[p.column]
-        m = scan_ops.scan_filter(col.words, p.constant, p.op, col.code_bits,
-                                 use_kernel=use_kernel)
-        mask = m if mask is None else (mask & m)
+def scan_query(table: Table, predicates, mode=None):
+    """Predicate tree (or legacy list = conjunction) -> packed selection
+    mask in the delimiter-bit layout of the leftmost predicate's column.
+    Mixed column widths are repacked automatically; padding rows never
+    match."""
+    plan = normalize(predicates)
+    physical.bind_check(plan, (), table.columns)
+    mask, _ = physical.eval_mask(plan, physical.table_slices(table), mode)
     return mask
 
 
-def scan_aggregate_query(table: Table, predicates: list[Predicate],
-                         agg_column: str, use_kernel: bool = True) -> dict:
-    """SELECT agg(agg_column) WHERE AND(predicates) — the paper's query."""
-    mask = scan_query(table, predicates, use_kernel=use_kernel)
-    col = table.columns[agg_column]
-    out = agg_ops.aggregate(col.words, mask, col.code_bits,
-                            use_kernel=use_kernel)
-    out["selectivity"] = (jnp.float32(out["count"])
-                          / jnp.float32(table.num_rows))
-    return out
+def scan_aggregate_query(table: Table, predicates, agg_column: str,
+                         mode=None) -> dict:
+    """SELECT agg(agg_column) WHERE <predicates> — the paper's query.
+    Returns exact host ints (sum/count/min/max) + selectivity."""
+    plan = normalize(predicates)
+    physical.bind_check(plan, (agg_column,), table.columns)
+    out = physical.finalize_aggs(physical.execute(
+        plan, (agg_column,), physical.table_slices(table), mode=mode))
+    res = out[agg_column]
+    res["selectivity"] = res["count"] / max(table.num_rows, 1)
+    return res
 
 
-def bytes_scanned(table: Table, predicates: list[Predicate],
-                  agg_column: str) -> int:
+def bytes_scanned(table: Table, predicates, agg_column: str) -> int:
     """Bytes a query streams from memory — the model's `percent accessed`
     numerator for this workload."""
-    cols = {p.column for p in predicates} | {agg_column}
-    return sum(table.columns[c].nbytes for c in cols)
+    plan = normalize(predicates)
+    physical.bind_check(plan, (agg_column,), table.columns)
+    return physical.referenced_bytes(plan, (agg_column,), table.columns)

@@ -3,9 +3,16 @@
 One pass over the packed column + packed predicate mask (the scan kernel's
 output): per grid step a (block_rows, 128) word tile is unpacked field-wise
 in VREGs (static shift loop, no gather), masked, and reduced into VMEM
-scratch accumulators; the final grid step writes the 4 scalars. With the
+scratch accumulators; the final grid step writes the 5 scalars. With the
 scan kernel this forms the paper's scan+aggregate query plan executing at
 HBM bandwidth (arithmetic intensity ~= 2 int-ops/byte).
+
+The sum leaves the kernel as two normalized 16-bit planes (sum_hi, sum_lo):
+int32 wraps after ~65k selected rows of a 16-bit column and TPUs have no
+int64, so each tile's (exact, block-size-bounded) int32 partial is split
+16/16 into two accumulators, normalized once at the end. See
+aggregate/ref.py for the bounds; ops.py clamps block_rows so a tile partial
+can never wrap.
 """
 from __future__ import annotations
 
@@ -25,10 +32,11 @@ def _agg_kernel(x_ref, m_ref, o_ref, acc, *, code_bits: int, vmax: int):
 
     @pl.when(i == 0)
     def _():
-        acc[0, 0] = jnp.int32(0)      # sum
-        acc[0, 1] = jnp.int32(0)      # count
-        acc[0, 2] = jnp.int32(vmax)   # min
-        acc[0, 3] = jnp.int32(0)      # max
+        acc[0, 0] = jnp.int32(0)      # sum_lo (16-bit plane, denormalized)
+        acc[0, 1] = jnp.int32(0)      # sum_hi
+        acc[0, 2] = jnp.int32(0)      # count
+        acc[0, 3] = jnp.int32(vmax)   # min
+        acc[0, 4] = jnp.int32(0)      # max
 
     x = x_ref[...]
     m = m_ref[...]
@@ -50,17 +58,22 @@ def _agg_kernel(x_ref, m_ref, o_ref, acc, *, code_bits: int, vmax: int):
         mn = jnp.minimum(mn, jnp.min(jnp.where(sel, vals, vmax)))
         mx = jnp.maximum(mx, jnp.max(jnp.where(sel, vals, 0)))
 
-    acc[0, 0] += s
-    acc[0, 1] += cnt
-    acc[0, 2] = jnp.minimum(acc[0, 2], mn)
-    acc[0, 3] = jnp.maximum(acc[0, 3], mx)
+    # s is exact (ops.py bounds block_rows); split it so the running sum
+    # never wraps: each plane grows < 2^16 per tile
+    acc[0, 0] += s & 0xFFFF
+    acc[0, 1] += s >> 16
+    acc[0, 2] += cnt
+    acc[0, 3] = jnp.minimum(acc[0, 3], mn)
+    acc[0, 4] = jnp.maximum(acc[0, 4], mx)
 
     @pl.when(i == n - 1)
     def _():
-        o_ref[0, 0] = acc[0, 0]
-        o_ref[0, 1] = acc[0, 1]
+        lo = acc[0, 0]
+        o_ref[0, 0] = lo & 0xFFFF             # normalized planes
+        o_ref[0, 1] = acc[0, 1] + (lo >> 16)
         o_ref[0, 2] = acc[0, 2]
         o_ref[0, 3] = acc[0, 3]
+        o_ref[0, 4] = acc[0, 4]
 
 
 @functools.partial(jax.jit,
@@ -68,8 +81,8 @@ def _agg_kernel(x_ref, m_ref, o_ref, acc, *, code_bits: int, vmax: int):
 def aggregate_packed(words2d, mask2d, *, code_bits: int,
                      block_rows: int = DEFAULT_BLOCK_ROWS,
                      interpret: bool = True):
-    """(rows, 128) packed words + packed mask -> int32[1, 4] =
-    [sum, count, min, max].
+    """(rows, 128) packed words + packed mask -> int32[1, 5] =
+    [sum_lo, sum_hi, count, min, max] (sum = sum_hi * 65536 + sum_lo).
 
     Rows are zero-padded to the block multiple; padded words carry zero
     mask delimiter bits so they contribute nothing to any accumulator."""
@@ -87,8 +100,8 @@ def aggregate_packed(words2d, mask2d, *, code_bits: int,
         grid=(rows // block_rows,),
         in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
                   pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1, 4), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 4), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((1, 4), jnp.int32)],
+        out_specs=pl.BlockSpec((1, 5), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 5), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, 5), jnp.int32)],
         interpret=interpret,
     )(words2d, mask2d)

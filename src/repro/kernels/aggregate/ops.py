@@ -1,5 +1,12 @@
 """Public fused scan+aggregate API, dispatched through
-repro.kernels.dispatch."""
+repro.kernels.dispatch.
+
+Aggregates carry the sum as two normalized 16-bit planes (sum_hi, sum_lo)
+— exact in int32 where a single int32 sum wraps after ~65k selected rows
+of a 16-bit column, and safe to psum across shards. `finalize` reassembles
+the exact Python int host-side; `sum_bound_block_rows` bounds the tile so
+per-tile partials stay exact.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -10,15 +17,35 @@ from repro.kernels.aggregate import ref
 from repro.kernels.scan_filter.kernel import DEFAULT_BLOCK_ROWS, LANES
 
 
-def aggregate(words, mask_words, code_bits: int, use_kernel: bool = True,
+def sum_bound_block_rows(code_bits: int) -> int:
+    """Largest block_rows whose per-tile sum partial is int32-exact:
+    block_rows * LANES words * codes/word * vmax < 2^31."""
+    cpw = 32 // code_bits
+    vmax = (1 << (code_bits - 1)) - 1
+    return max(1, (2**31 - 1) // (LANES * cpw * vmax))
+
+
+def finalize(d: dict) -> dict:
+    """Device aggregate dict -> exact host ints, planes reassembled
+    (the only step that may exceed int32, hence Python ints)."""
+    return {"sum": (int(d["sum_hi"]) << 16) + int(d["sum_lo"]),
+            "count": int(d["count"]),
+            "min": int(d["min"]),
+            "max": int(d["max"])}
+
+
+def aggregate(words, mask_words, code_bits: int,
               block_rows: int | None = None, mode=None):
-    """words/mask_words: (n_words,) uint32 -> dict(sum, count, min, max).
+    """words/mask_words: (n_words,) uint32 ->
+    dict(sum_lo, sum_hi, count, min, max) of int32 scalars.
 
     Codes in padded tail words have mask delimiter bits 0 and are ignored.
     """
-    r = dispatch.resolve(mode, use_kernel=use_kernel)
+    r = dispatch.resolve(mode)
     if not r.use_pallas:
         return ref.aggregate_ref(words, mask_words, code_bits)
+    if words.size == 0:              # zero-row grid is undefined
+        return ref.identity(code_bits)
     w = jnp.asarray(words, jnp.uint32)
     m = jnp.asarray(mask_words, jnp.uint32)
     pad = (-w.shape[0]) % LANES
@@ -33,10 +60,11 @@ def aggregate(words, mask_words, code_bits: int, use_kernel: bool = True,
                                   tune.shape_key(rows=rows, bits=code_bits),
                                   {"block_rows": br})["block_rows"]
             br = max(1, min(int(br), rows))
+    br = min(br, sum_bound_block_rows(code_bits))
     out = K.aggregate_packed(w, m, code_bits=code_bits, block_rows=br,
                              interpret=r.interpret)
-    return {"sum": out[0, 0], "count": out[0, 1],
-            "min": out[0, 2], "max": out[0, 3]}
+    return {"sum_lo": out[0, 0], "sum_hi": out[0, 1], "count": out[0, 2],
+            "min": out[0, 3], "max": out[0, 4]}
 
 
 def _example(rng):

@@ -1,19 +1,54 @@
-"""Pure-jnp oracle for the fused masked aggregate over packed columns."""
+"""Pure-jnp oracle for the fused masked aggregate over packed columns.
+
+The sum is returned as two normalized 16-bit planes (sum_hi << 16 | sum_lo)
+instead of one int32: a 16-bit column overflows int32 after only ~65k
+selected rows, and neither TPUs nor default jax carry int64. The split is
+int32-exact for any column up to 2^27 codes per device, survives a psum
+across shards unchanged, and `ops.finalize` reassembles the exact Python
+int host-side.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.kernels.scan_filter.ref import unpack, unpack_mask
 
+_CHUNK = 4096        # partials stay < 2^27: exact in int32 for any width
+
+
+def split_sum(vals):
+    """Exact sum of non-negative int32 codes (< 2^16 each) as normalized
+    16-bit planes (lo, hi): sum == hi * 65536 + lo, both int32-exact."""
+    n = vals.shape[0]
+    v = jnp.pad(vals, (0, (-n) % _CHUNK)).reshape(-1, _CHUNK)
+    part = jnp.sum(v, axis=1)                   # < CHUNK * 2^16 = 2^27
+    lo = jnp.sum(part & 0xFFFF)                 # < n/CHUNK * 2^16
+    hi = jnp.sum(part >> 16)
+    return lo & 0xFFFF, hi + (lo >> 16)
+
+
+def identity(code_bits: int) -> dict:
+    """The empty-selection aggregate: what every path returns for zero
+    selected (or zero existing) rows."""
+    vmax = (1 << (code_bits - 1)) - 1
+    return {"sum_lo": jnp.int32(0), "sum_hi": jnp.int32(0),
+            "count": jnp.int32(0), "min": jnp.int32(vmax),
+            "max": jnp.int32(0)}
+
 
 def aggregate_ref(words, mask_words, code_bits: int):
-    """Returns dict(sum, count, min, max) over codes whose delimiter bit is
-    set in mask_words. Empty selection: sum=0, count=0, min=vmax, max=0."""
+    """Returns dict(sum_lo, sum_hi, count, min, max) over codes whose
+    delimiter bit is set in mask_words. Empty selection: sums/count/max 0,
+    min=vmax."""
+    if words.size == 0:              # empty column: jnp.min would reject it
+        return identity(code_bits)
     vals = unpack(words, code_bits).astype(jnp.int32)
     sel = unpack_mask(mask_words, code_bits)
     vmax = jnp.int32((1 << (code_bits - 1)) - 1)
+    lo, hi = split_sum(jnp.where(sel, vals, 0))
     return {
-        "sum": jnp.sum(jnp.where(sel, vals, 0)),
+        "sum_lo": lo,
+        "sum_hi": hi,
         "count": jnp.sum(sel.astype(jnp.int32)),
         "min": jnp.min(jnp.where(sel, vals, vmax)),
         "max": jnp.max(jnp.where(sel, vals, 0)),

@@ -1,0 +1,1 @@
+"""Fused predicate scan + masked aggregate over bit-packed columns."""

@@ -1,0 +1,132 @@
+"""Fused BitWeaving scan + masked aggregate Pallas TPU kernel.
+
+"Processing Data Where It Makes Sense" applied inside one chip: the scan's
+packed predicate mask never round-trips through HBM. Per grid step a
+(block_rows, 128) tile of the predicate column is compared against the
+constant with the scan kernel's VPU bit-tricks (GE/EQ primitives, optional
+complement for the composed lt/le/ne forms), ANDed with the validity mask
+(tail/shard padding rows carry zero delimiter bits), and immediately
+reduced against the aggregate column's tile into VMEM scratch accumulators.
+
+Streams 3 inputs and writes 4 scalars, vs 4 streamed tiles + a full mask
+write for the scan->aggregate pipeline — at the paper's ~1 B/instr scan
+regime that is a 40% traffic cut for the dominant single-predicate query.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.scan_filter.kernel import DEFAULT_BLOCK_ROWS, LANES
+from repro.kernels.scan_filter.ref import field_masks
+
+
+def _fused_kernel(p_ref, a_ref, v_ref, o_ref, acc, *, op: str,
+                  const_packed, delim, low, invert: bool, code_bits: int,
+                  vmax: int):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _():
+        acc[0, 0] = jnp.int32(0)      # sum_lo (16-bit plane, denormalized)
+        acc[0, 1] = jnp.int32(0)      # sum_hi
+        acc[0, 2] = jnp.int32(0)      # count
+        acc[0, 3] = jnp.int32(vmax)   # min
+        acc[0, 4] = jnp.int32(0)      # max
+
+    x = p_ref[...]
+    h = jnp.uint32(delim)
+    if op == "ge":
+        m = ((x | h) - jnp.uint32(const_packed)) & h
+    elif op == "eq":
+        z = x ^ jnp.uint32(const_packed)
+        m = (~((z | h) - jnp.uint32(low))) & h
+    else:
+        raise ValueError(op)
+    if invert:
+        m = ~m & h
+    m = m & v_ref[...]
+
+    a = a_ref[...]
+    c = 32 // code_bits
+    value_mask = jnp.uint32((1 << (code_bits - 1)) - 1)
+    s = jnp.int32(0)
+    cnt = jnp.int32(0)
+    mn = jnp.int32(vmax)
+    mx = jnp.int32(0)
+    for f in range(c):                       # static unroll over fields
+        vals = ((a >> jnp.uint32(f * code_bits)) & value_mask).astype(
+            jnp.int32)
+        bit = ((m >> jnp.uint32(f * code_bits + code_bits - 1))
+               & jnp.uint32(1)).astype(jnp.int32)
+        sel = bit == 1
+        s += jnp.sum(vals * bit)
+        cnt += jnp.sum(bit)
+        mn = jnp.minimum(mn, jnp.min(jnp.where(sel, vals, vmax)))
+        mx = jnp.maximum(mx, jnp.max(jnp.where(sel, vals, 0)))
+
+    # s is exact (ops.py bounds block_rows); split so the running sum
+    # never wraps int32 (see aggregate/kernel.py)
+    acc[0, 0] += s & 0xFFFF
+    acc[0, 1] += s >> 16
+    acc[0, 2] += cnt
+    acc[0, 3] = jnp.minimum(acc[0, 3], mn)
+    acc[0, 4] = jnp.maximum(acc[0, 4], mx)
+
+    @pl.when(i == n - 1)
+    def _():
+        lo = acc[0, 0]
+        o_ref[0, 0] = lo & 0xFFFF             # normalized planes
+        o_ref[0, 1] = acc[0, 1] + (lo >> 16)
+        o_ref[0, 2] = acc[0, 2]
+        o_ref[0, 3] = acc[0, 3]
+        o_ref[0, 4] = acc[0, 4]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("constant", "op", "invert", "code_bits",
+                                    "block_rows", "interpret"))
+def scan_aggregate_packed(pred2d, agg2d, valid2d, *, constant: int, op: str,
+                          invert: bool, code_bits: int,
+                          block_rows: int = DEFAULT_BLOCK_ROWS,
+                          interpret: bool = True):
+    """(rows, 128) packed predicate/aggregate/validity words -> int32[1, 5]
+    = [sum_lo, sum_hi, count, min, max] (sum = sum_hi * 65536 + sum_lo).
+    `op` is a kernel primitive (ge | eq); the six public predicates are
+    composed in ops.py via (op, constant, invert).
+
+    Rows are zero-padded to the block multiple; padded validity words carry
+    zero delimiter bits so padding contributes to no accumulator."""
+    rows = pred2d.shape[0]
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        pred2d = jnp.pad(pred2d, ((0, pad), (0, 0)))
+        agg2d = jnp.pad(agg2d, ((0, pad), (0, 0)))
+        valid2d = jnp.pad(valid2d, ((0, pad), (0, 0)))
+        rows += pad
+    delim, low, value = field_masks(code_bits)
+    vmax = int(value)
+    c = 32 // code_bits
+    const_packed = 0
+    for i in range(c):
+        const_packed |= (int(constant) & vmax) << (i * code_bits)
+    kernel = functools.partial(_fused_kernel, op=op,
+                               const_packed=const_packed, delim=int(delim),
+                               low=int(low), invert=invert,
+                               code_bits=code_bits, vmax=vmax)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((1, 5), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 5), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, 5), jnp.int32)],
+        interpret=interpret,
+    )(pred2d, agg2d, valid2d)

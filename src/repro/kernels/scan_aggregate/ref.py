@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused scan+aggregate: scan -> valid-mask -> agg."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.aggregate.ref import aggregate_ref
+from repro.kernels.scan_filter.ref import scan_ref
+
+
+def scan_aggregate_ref(pred_words, agg_words, valid_words, constant: int,
+                       op: str, code_bits: int):
+    """Predicate scan over pred_words, validity-masked, aggregated over
+    agg_words. valid_words is a packed delimiter-bit mask with bits set only
+    for real (non-padding) rows, so tail/shard padding never matches."""
+    mask = scan_ref(pred_words, constant, op, code_bits)
+    mask = mask & jnp.asarray(valid_words, jnp.uint32)
+    return aggregate_ref(agg_words, mask, code_bits)

@@ -40,6 +40,8 @@ def scan_filter(words, constant: int, op: str, code_bits: int,
     r = dispatch.resolve(mode, use_kernel=use_kernel)
     if not r.use_pallas:
         return ref.scan_ref(words, constant, op, code_bits)
+    if words.shape[0] == 0:           # zero-row grid is undefined
+        return jnp.zeros((0,), jnp.uint32)
 
     delim, _, value = field_masks(code_bits)
     vmax = int(value)

@@ -53,6 +53,21 @@ def unpack(words, code_bits: int):
     return vals.reshape(-1)
 
 
+def pack_mask(sel, code_bits: int):
+    """Boolean per-code selection -> packed delimiter-bit mask words
+    (inverse of unpack_mask; selection padded to a word multiple with
+    False). Used to build validity masks that cancel tail/shard padding."""
+    sel = np.asarray(sel, bool)
+    c = codes_per_word(code_bits)
+    pad = (-len(sel)) % c
+    sel = np.pad(sel, (0, pad)).reshape(-1, c)
+    out = np.zeros(len(sel), np.uint32)
+    for i in range(c):
+        out |= sel[:, i].astype(np.uint32) << np.uint32(
+            i * code_bits + code_bits - 1)
+    return out
+
+
 def unpack_mask(mask_words, code_bits: int):
     """Packed delimiter-bit mask -> boolean per code."""
     c = codes_per_word(code_bits)

@@ -1,0 +1,13 @@
+"""Sharded SLA-aware query engine: the paper's workload, executable.
+
+Logical plans (Pred/And/Or trees + multi-column aggregates) compile to
+kernel-dispatch physical operators, shard row-wise across a mesh, and batch
+through the shared EDF deadline scheduler — with measured throughput fed
+back to the analytical provisioning model in repro.core.
+"""
+from repro.query.engine import QueryEngine, QueryResult
+from repro.query.plan import And, Or, Plan, Pred, Predicate, Query
+from repro.query.sharded import ShardedTable
+
+__all__ = ["And", "Or", "Plan", "Pred", "Predicate", "Query",
+           "QueryEngine", "QueryResult", "ShardedTable"]

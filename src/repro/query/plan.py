@@ -1,0 +1,127 @@
+"""Logical query plans: predicate trees + multi-column aggregates.
+
+WideTable's observation (Li & Patel, VLDB'14) — most analytic queries are
+predicate scans feeding aggregates — generalized beyond the seed's
+conjunction-of-one-width: predicates compose with AND/OR across columns of
+*different* code widths (the physical layer repacks masks automatically),
+and one query aggregates any number of columns over the same selection.
+
+Plans are frozen, hashable dataclasses, so compiled/jitted physical
+executions can be cached per plan shape.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.kernels.scan_filter.ref import OPS
+
+
+class Plan:
+    """Base predicate-tree node; composes with `&` and `|`."""
+
+    def __and__(self, other: "Plan") -> "And":
+        return And.of(self, other)
+
+    def __or__(self, other: "Plan") -> "Or":
+        return Or.of(self, other)
+
+
+@dataclass(frozen=True)
+class Pred(Plan):
+    """column <op> constant over dictionary codes (op: lt|le|gt|ge|eq|ne)."""
+    column: str
+    op: str
+    constant: int
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(
+                f"unknown predicate op {self.op!r}; expected one of {OPS}")
+        if self.constant < 0:
+            raise ValueError(
+                f"predicate constant {self.constant} is negative; codes are "
+                f"unsigned dictionary indices")
+
+
+def _flatten(cls, children):
+    out = []
+    for c in children:
+        out.extend(c.children if isinstance(c, cls) else (c,))
+    return tuple(out)
+
+
+@dataclass(frozen=True)
+class And(Plan):
+    children: tuple
+
+    def __post_init__(self):
+        if not self.children:
+            raise ValueError("And() needs at least one child predicate")
+
+    @classmethod
+    def of(cls, *children: Plan) -> "And":
+        return cls(_flatten(cls, children))
+
+
+@dataclass(frozen=True)
+class Or(Plan):
+    children: tuple
+
+    def __post_init__(self):
+        if not self.children:
+            raise ValueError("Or() needs at least one child predicate")
+
+    @classmethod
+    def of(cls, *children: Plan) -> "Or":
+        return cls(_flatten(cls, children))
+
+
+Predicate = Pred       # legacy name (repro.db.queries)
+
+
+def normalize(where) -> Plan:
+    """Accept a Plan node, a single Pred, or the legacy list-of-Preds
+    (implicit AND) and return a Plan tree."""
+    if isinstance(where, Plan):
+        return where
+    if isinstance(where, (list, tuple)):
+        if not where:
+            raise ValueError("need at least one predicate")
+        bad = [p for p in where if not isinstance(p, Plan)]
+        if bad:
+            raise ValueError(f"predicates must be Plan nodes, got {bad!r}")
+        return where[0] if len(where) == 1 else And.of(*where)
+    raise ValueError(f"cannot build a plan from {type(where).__name__!r}; "
+                     f"pass a Pred/And/Or tree or a list of Preds")
+
+
+def columns_of(plan: Plan) -> set[str]:
+    if isinstance(plan, Pred):
+        return {plan.column}
+    out: set[str] = set()
+    for c in plan.children:
+        out |= columns_of(c)
+    return out
+
+
+@dataclass(frozen=True)
+class Query:
+    """SELECT <aggregates> WHERE <where>: the engine's unit of admission.
+
+    where: a Plan tree (or legacy list of Preds, normalized lazily);
+    aggregates: columns whose (sum, count, min, max) are computed over the
+    selection.
+    """
+    where: Plan | tuple
+    aggregates: tuple[str, ...]
+
+    def __post_init__(self):
+        # normalize eagerly so a Query is hashable (jit-cache key) and
+        # malformed trees fail at construction, not execution
+        object.__setattr__(self, "where", normalize(self.where))
+        object.__setattr__(self, "aggregates", tuple(self.aggregates))
+        if not self.aggregates:
+            raise ValueError("query needs at least one aggregate column")
+
+    def plan(self) -> Plan:
+        return self.where

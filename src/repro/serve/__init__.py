@@ -1,1 +1,2 @@
-"""Serving substrate: prefill/decode steps + continuous-batching engine."""
+"""Serving substrate: prefill/decode steps, continuous-batching engine,
+and the shared SLA deadline machinery (repro.serve.sla)."""

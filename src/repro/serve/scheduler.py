@@ -1,9 +1,9 @@
 """SLA-aware request scheduler for the serving engine.
 
 The paper provisions clusters against a response-time SLA; this module is
-the runtime half of that contract: requests carry deadlines, the scheduler
-orders admission by slack (earliest-deadline-first), rejects requests whose
-deadline is already infeasible given the engine's measured decode rate, and
+the runtime half of that contract for LM serving: requests carry deadlines,
+admission/ordering runs through the shared EDF machinery in
+`repro.serve.sla` (also used by the analytic query engine), and the summary
 reports attained-vs-promised latency so the advisor's provisioning can be
 checked in production.
 
@@ -11,32 +11,10 @@ Pure host-side logic over ServeEngine — deterministic and unit-testable.
 """
 from __future__ import annotations
 
-import heapq
 import time
-from dataclasses import dataclass, field
-
-import numpy as np
 
 from repro.serve.engine import Request, ServeEngine
-
-
-@dataclass(order=True)
-class _Queued:
-    deadline: float
-    seq: int
-    req: Request = field(compare=False)
-
-
-@dataclass
-class SLAReport:
-    rid: int
-    deadline: float
-    finished_at: float
-    tokens: int
-
-    @property
-    def met(self) -> bool:
-        return self.finished_at <= self.deadline
+from repro.serve.sla import DeadlineQueue, SLAReport, summarize
 
 
 class SLAScheduler:
@@ -45,7 +23,8 @@ class SLAScheduler:
     decode_rate_tps: measured tokens/sec/slot (from a warmup run or the
     advisor's roofline estimate) used for feasibility-based admission
     control: a request is rejected (not silently late) if even an empty
-    slot couldn't finish it by its deadline.
+    slot couldn't finish it by its deadline. A zero/unknown rate estimates
+    infinitely slow decode, so only deadline-free requests are admitted.
     """
 
     def __init__(self, engine: ServeEngine, decode_rate_tps: float,
@@ -53,53 +32,47 @@ class SLAScheduler:
         self.engine = engine
         self.rate = decode_rate_tps
         self.clock = clock
-        self.queue: list[_Queued] = []
-        self._seq = 0
+        self.queue = DeadlineQueue(clock, self._est_service_s)
         self.reports: list[SLAReport] = []
-        self.rejected: list[int] = []
 
-    def submit(self, req: Request, deadline: float):
+    def _est_service_s(self, req: Request) -> float:
+        return req.max_new_tokens / max(self.rate, 1e-9)
+
+    @property
+    def rejected(self) -> list[int]:
+        return [r.rid for r in self.queue.rejected]
+
+    def submit(self, req: Request, deadline: float) -> bool:
         """deadline: absolute clock time by which generation must finish."""
-        est = self.clock() + req.max_new_tokens / max(self.rate, 1e-9)
-        if est > deadline:
-            self.rejected.append(req.rid)
-            return False
-        self._seq += 1
-        heapq.heappush(self.queue, _Queued(deadline, self._seq, req))
-        return True
+        req._submitted_at = self.clock()  # type: ignore[attr-defined]
+        return self.queue.push(req, deadline)
 
     def _admit(self):
-        while self.queue:
-            head = self.queue[0]
-            # drop already-hopeless requests rather than wasting slots
-            if self.clock() + head.req.max_new_tokens / self.rate \
-                    > head.deadline:
-                heapq.heappop(self.queue)
-                self.rejected.append(head.req.rid)
-                continue
-            if not self.engine.submit(head.req):
+        while True:
+            got = self.queue.pop()        # sheds now-hopeless requests
+            if got is None:
                 return
-            head.req._deadline = head.deadline  # type: ignore[attr-defined]
-            heapq.heappop(self.queue)
+            req, deadline = got
+            if not self.engine.submit(req):
+                self.queue.requeue(req, deadline)   # engine full; keep it
+                return
+            req._deadline = deadline      # type: ignore[attr-defined]
 
     def run(self) -> list[SLAReport]:
-        while self.queue or any(s is not None for s in self.engine.slots):
+        while len(self.queue) or any(s is not None
+                                     for s in self.engine.slots):
             self._admit()
             for r in self.engine.step():
+                now = self.clock()
                 self.reports.append(SLAReport(
                     rid=r.rid,
                     deadline=getattr(r, "_deadline", float("inf")),
-                    finished_at=self.clock(),
-                    tokens=len(r.generated)))
+                    submitted_at=getattr(r, "_submitted_at", now),
+                    finished_at=now,
+                    work=len(r.generated)))
         return self.reports
 
     def summary(self) -> dict:
-        met = [r for r in self.reports if r.met]
-        lat = [r.finished_at for r in self.reports]
-        return {
-            "served": len(self.reports),
-            "rejected": len(self.rejected),
-            "sla_attainment": (len(met) / len(self.reports)
-                               if self.reports else 1.0),
-            "tokens": sum(r.tokens for r in self.reports),
-        }
+        out = summarize(self.reports, rejected=len(self.queue.rejected))
+        out["tokens"] = int(sum(r.work for r in self.reports))
+        return out

@@ -1,0 +1,121 @@
+"""Shared SLA machinery: deadline queues + latency/attainment summaries.
+
+The paper provisions clusters against a response-time SLA; two runtime
+subsystems enforce that contract at serving time — the LM request scheduler
+(repro.serve.scheduler) and the analytic query engine (repro.query.engine).
+Both share this module:
+
+- `DeadlineQueue`: earliest-deadline-first ordering with feasibility-based
+  admission control. `est_service_s(item)` estimates how long an item needs
+  (tokens / decode rate for LM requests, bytes / measured scan rate for
+  queries); items that cannot finish by their deadline even if started now
+  are rejected at push, and items that became hopeless while queued are
+  dropped at pop so a busy server never spends capacity on guaranteed
+  misses.
+- `SLAReport` / `summarize`: attained-vs-promised latency (p50/p99 and
+  attainment fraction), the numbers the provisioning model's predictions
+  are checked against in production.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclass(order=True)
+class _Entry:
+    deadline: float
+    seq: int
+    item: Any = field(compare=False)
+
+
+@dataclass
+class SLAReport:
+    """One served item's attained latency vs its promised deadline."""
+    rid: int
+    deadline: float
+    submitted_at: float
+    finished_at: float
+    work: float = 0.0            # tokens generated / bytes scanned
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+    @property
+    def met(self) -> bool:
+        return self.finished_at <= self.deadline
+
+
+class DeadlineQueue:
+    """EDF queue with feasibility admission and hopeless-item shedding."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic,
+                 est_service_s: Callable[[Any], float] = lambda item: 0.0):
+        self.clock = clock
+        self.est_service_s = est_service_s
+        self._heap: list[_Entry] = []
+        self._seq = 0
+        self.rejected: list[Any] = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def feasible(self, item, deadline: float) -> bool:
+        return self.clock() + self.est_service_s(item) <= deadline
+
+    def push(self, item, deadline: float) -> bool:
+        """Admit iff the item could still meet its deadline; rejected items
+        are recorded, not silently served late."""
+        if not self.feasible(item, deadline):
+            self.rejected.append(item)
+            return False
+        self.requeue(item, deadline)
+        return True
+
+    def requeue(self, item, deadline: float) -> None:
+        """Re-insert without re-checking feasibility (an admitted item that
+        could not be placed keeps its admission)."""
+        self._seq += 1
+        heapq.heappush(self._heap, _Entry(deadline, self._seq, item))
+
+    def _prune(self) -> None:
+        while self._heap and not self.feasible(self._heap[0].item,
+                                               self._heap[0].deadline):
+            self.rejected.append(heapq.heappop(self._heap).item)
+
+    def peek(self):
+        """(item, deadline) of the earliest still-feasible entry, or None."""
+        self._prune()
+        if not self._heap:
+            return None
+        return self._heap[0].item, self._heap[0].deadline
+
+    def pop(self):
+        """Pop the earliest still-feasible entry as (item, deadline)."""
+        self._prune()
+        if not self._heap:
+            return None
+        e = heapq.heappop(self._heap)
+        return e.item, e.deadline
+
+    def ordered_items(self) -> list:
+        """Queued items in deadline order (inspection/tests only)."""
+        return [e.item for e in sorted(self._heap)]
+
+
+def summarize(reports: list[SLAReport], rejected: int = 0) -> dict:
+    """Attainment + latency percentiles for a batch of SLAReports."""
+    lat = np.asarray([r.latency_s for r in reports], float)
+    met = sum(1 for r in reports if r.met)
+    return {
+        "served": len(reports),
+        "rejected": rejected,
+        "sla_attainment": met / len(reports) if reports else 1.0,
+        "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+        "latency_p99_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+    }

@@ -196,6 +196,40 @@ def check_elastic_rescale():
     print("OK elastic_rescale")
 
 
+def check_sharded_query_engine():
+    """8-shard scan-aggregate must match the single-device oracle
+    bit-exactly: AND/OR, mixed widths, fused path, non-divisible rows."""
+    from repro.db import Table
+    from repro.query import Pred, Query, QueryEngine, ShardedTable
+
+    table = Table.synthetic("t", 100_001, {"a": 8, "b": 8, "w": 16, "x": 4},
+                            seed=11)
+    mesh = make_mesh((8,), ("data",))
+    st = ShardedTable.shard(table, mesh)
+    assert st.n_shards == 8
+    queries = [
+        Query(Pred("a", "lt", 64), aggregates=("b",)),          # fused
+        Query(Pred("a", "lt", 50) & Pred("w", "ge", 9000),      # mixed AND
+              aggregates=("w", "b")),
+        Query(Pred("x", "eq", 3) | Pred("w", "lt", 500),        # mixed OR
+              aggregates=("a",)),
+    ]
+    single = QueryEngine(table, mode="auto")
+    sharded = QueryEngine(st, mode="auto")
+    for q in queries:
+        single.submit(q)
+        sharded.submit(q)
+        want = single.run()[0]
+        got = sharded.run()[0]
+        assert got.aggregates == want.aggregates, (q, got.aggregates,
+                                                   want.aggregates)
+        assert got.count == want.count
+    assert sharded.summary()["measured_gbps"] > 0
+    mc = sharded.model_check()
+    assert mc["chips"] == 8 and mc["measured_gbps"] > 0
+    print("OK sharded_query_engine")
+
+
 def check_serve_step_sharded():
     from repro.configs import get_config
     from repro.configs.base import ShapeSpec
@@ -219,6 +253,7 @@ if __name__ == "__main__":
         "train": check_sharded_train_step,
         "serve": check_serve_step_sharded,
         "elastic": check_elastic_rescale,
+        "query": check_sharded_query_engine,
     }
     if which == "all":
         for fn in checks.values():

@@ -80,8 +80,8 @@ class TestQueries:
         assert n == self.t.columns["a"].nbytes + self.t.columns["b"].nbytes
 
     def test_kernel_and_ref_paths_agree(self):
-        for use_kernel in (True, False):
+        for mode in ("pallas", "xla_ref", "auto"):
             r = scan_aggregate_query(self.t, [Predicate("a", "ge", 64)],
-                                     "a", use_kernel=use_kernel)
+                                     "a", mode=mode)
             sel = self.av >= 64
             assert int(r["count"]) == int(sel.sum())

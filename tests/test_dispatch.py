@@ -44,10 +44,10 @@ def test_xla_ref_and_legacy_use_kernel_flag():
     assert dispatch.resolve(None).use_pallas
 
 
-def test_registry_has_all_five_families():
+def test_registry_has_all_families():
     assert set(dispatch.registered()) == {
-        "scan_filter", "aggregate", "flash_attention", "decode_attention",
-        "ssd_chunk"}
+        "scan_filter", "aggregate", "scan_aggregate", "flash_attention",
+        "decode_attention", "ssd_chunk"}
 
 
 # --------------------------------------------------------------------------

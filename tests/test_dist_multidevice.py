@@ -24,7 +24,8 @@ def run_child(which: str):
 
 
 @pytest.mark.parametrize("which", ["pipeline", "pipeline2d", "compression",
-                                   "ef", "train", "serve", "elastic"])
+                                   "ef", "train", "serve", "elastic",
+                                   "query"])
 def test_multidevice(which):
     out = run_child(which)
     assert "OK" in out

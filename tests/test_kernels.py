@@ -68,12 +68,29 @@ def test_aggregate_matches_ref(code_bits, selectivity):
     mask = scan_ref.scan_ref(packed, const, "lt", code_bits)
     got = agg_ops.aggregate(packed, mask, code_bits)
     want = agg_ref.aggregate_ref(packed, mask, code_bits)
-    for key in ("sum", "count", "min", "max"):
+    for key in ("sum_lo", "sum_hi", "count", "min", "max"):
         assert int(got[key]) == int(want[key]), (key, code_bits, selectivity)
     # cross-check against plain numpy on the unpacked values
     sel = codes < const
-    assert int(got["count"]) == int(sel.sum())
-    assert int(got["sum"]) == int(codes[sel].sum())
+    fin = agg_ops.finalize(got)
+    assert fin["count"] == int(sel.sum())
+    assert fin["sum"] == int(codes[sel].sum())
+
+
+def test_aggregate_sum_exact_beyond_int32():
+    """300k selected rows of a 16-bit column sum past 2^31; the 16-bit
+    sum planes must stay exact where a single int32 accumulator wraps."""
+    n = 300_000
+    codes = RNG.integers(0, 1 << 15, n)
+    packed = scan_ref.pack(codes, 16)
+    mask = scan_ref.scan_ref(packed, 0, "ge", 16)    # select everything
+    want = int(codes.astype(np.int64).sum())
+    assert want > 2**31                              # the case that wrapped
+    for mode in ("pallas", "xla_ref"):
+        fin = agg_ops.finalize(agg_ops.aggregate(packed, mask, 16,
+                                                 mode=mode))
+        assert fin["sum"] == want, mode
+        assert fin["count"] == n
 
 
 # --------------------------------------------------------------------------

@@ -28,8 +28,8 @@ def make_inputs(key, b, s, h, p, n, dtype=jnp.float32):
 def test_kernel_matches_chunk_ref(dtype, b, s, h, p, n, chunk):
     x, dt, a_log, bm, cm = make_inputs(jax.random.PRNGKey(0), b, s, h, p, n,
                                        dtype)
-    y_k, h_k = ssd_ops.ssd(x, dt, a_log, bm, cm, chunk, use_kernel=True)
-    y_r, h_r = ssd_ops.ssd(x, dt, a_log, bm, cm, chunk, use_kernel=False)
+    y_k, h_k = ssd_ops.ssd(x, dt, a_log, bm, cm, chunk, mode="pallas")
+    y_r, h_r = ssd_ops.ssd(x, dt, a_log, bm, cm, chunk, mode="xla_ref")
     tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
         dict(rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(y_k, np.float32),

@@ -64,10 +64,44 @@ class TestSLAScheduler:
             sched.submit(Request(rid=rid, prompt=rng.integers(0, 200, 3),
                                  max_new_tokens=2), deadline=dl)
         # queue (beyond the 2 slots) must pop earliest-deadline-first
-        order = [q.req.rid for q in sorted(sched.queue)]
+        order = [r.rid for r in sched.queue.ordered_items()]
         assert order == [2, 3, 1, 0]
         sched.run()
         assert sched.summary()["served"] == 4
+
+    def test_summary_reports_latency_percentiles(self, engine):
+        clock = FakeClock()
+        sched = SLAScheduler(engine, decode_rate_tps=1e9, clock=clock)
+        rng = np.random.default_rng(2)
+        for i in range(3):
+            sched.submit(Request(rid=i, prompt=rng.integers(0, 200, 3),
+                                 max_new_tokens=2), deadline=1e9)
+            clock.t += 1.0                   # staggered arrivals
+        sched.run()
+        s = sched.summary()
+        # all finish together; latencies are the staggered waits 1s/2s/3s
+        assert s["latency_p50_s"] == pytest.approx(2.0)
+        longest = max(r.latency_s for r in sched.reports)
+        assert s["latency_p50_s"] < s["latency_p99_s"] <= longest
+
+    def test_zero_decode_rate_is_guarded(self, engine):
+        """Seed bug: _admit divided by self.rate unguarded -> ZeroDivision
+        when decode_rate_tps=0 (unknown rate). Now: a zero rate estimates
+        infinitely slow decode, so finite deadlines reject upfront and
+        deadline-free requests still run."""
+        clock = FakeClock()
+        sched = SLAScheduler(engine, decode_rate_tps=0.0, clock=clock)
+        rng = np.random.default_rng(3)
+        assert not sched.submit(
+            Request(rid=0, prompt=rng.integers(0, 200, 3),
+                    max_new_tokens=2), deadline=1e9)
+        ok = sched.submit(Request(rid=1, prompt=rng.integers(0, 200, 3),
+                                  max_new_tokens=2),
+                          deadline=float("inf"))
+        assert ok
+        reports = sched.run()                # must not raise
+        assert [r.rid for r in reports] == [1]
+        assert sched.rejected == [0]
 
 
 class TestMetricsLogger:
