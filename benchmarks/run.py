@@ -23,6 +23,7 @@ MODULES = (
     "benchmarks.advisor_tpu",
     "benchmarks.kernels_bench",
     "benchmarks.queries_bench",
+    "benchmarks.tier_bench",
     "benchmarks.roofline_table",
 )
 

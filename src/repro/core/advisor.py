@@ -13,7 +13,10 @@ collective roofline term (which the paper ignored, §6.2) layered on top.
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
+
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import traffic
@@ -100,10 +103,11 @@ def calibrated_system(system: SystemSpec,
     rescaled so max_cores * core_perf equals the measured rate. Provisioning
     a cluster from this spec answers the paper's question for the system we
     actually built, not the datasheet."""
-    if measured_chip_bps <= 0:
+    if not math.isfinite(measured_chip_bps) or measured_chip_bps <= 0:
         raise ValueError(
-            f"measured_chip_bps={measured_chip_bps} must be positive; run "
-            f"at least one query before calibrating")
+            f"measured_chip_bps={measured_chip_bps} is a degenerate "
+            f"calibration (must be a finite positive rate); run at least "
+            f"one query before calibrating")
     return dataclasses.replace(
         system, name=f"{system.name}-measured",
         core_perf=measured_chip_bps / system.max_chip_cores)
@@ -120,6 +124,88 @@ def advise_scan_sla(db_bytes: float, bytes_per_query: float, sla_s: float,
         sys_ = calibrated_system(sys_, measured_chip_bps)
     wl = scan_workload(db_bytes, bytes_per_query)
     return Advice(provision_performance(sys_, wl, sla_s), "sla_s", sla_s)
+
+
+def advise_tier_split(db_bytes: float, bytes_per_query: float, sla_s: float,
+                      *, hit_curve, fast_gbps: float, capacity_gbps: float,
+                      chips: int = 1, fractions=None,
+                      fast_system: SystemSpec | None = None) -> dict:
+    """The tiered form of the paper's question: how much die-stacked fast
+    tier does this workload need to meet its SLA?
+
+    Searches the fast-tier fraction of the database (`fractions`, default
+    5%..100%): at each fraction f, `hit_curve(f)` — the fraction of scanned
+    bytes the placement engine serves from the fast tier (measured stats,
+    or repro.tier.trace.zipf_hit_curve analytically) — yields a blended
+    rate (serve.sla.blended_bps), a per-query response time, and the chip
+    count performance-provisioning would need at that rate. Every row —
+    and the measured fast rate itself — is cross-checked against the
+    Eq. 4 roofline of `fast_system`'s *datasheet* (default DIE_STACKED):
+    an independent bound, so a mis-measured rate (wrong byte accounting, a
+    broken blend) fails the check instead of defining it.
+
+    Returns {"rows": [...], "best": minimal-feasible row or None,
+    "roofline_gbps": ..., "fast_within_roofline": bool}.
+    """
+    from repro.core.systems import DIE_STACKED
+    from repro.serve.sla import blended_bps
+
+    if db_bytes <= 0 or bytes_per_query <= 0:
+        raise ValueError(f"db_bytes={db_bytes} and bytes_per_query="
+                         f"{bytes_per_query} must be positive")
+    if sla_s <= 0:
+        raise ValueError(f"sla_s={sla_s} must be positive")
+    if fast_gbps <= 0 or capacity_gbps <= 0:
+        raise ValueError(f"tier rates must be positive, got fast_gbps="
+                         f"{fast_gbps} capacity_gbps={capacity_gbps}")
+    if not callable(hit_curve):
+        pts = sorted(hit_curve.items())     # measured {fraction: hit_rate}
+        if not pts:
+            raise ValueError("hit_curve dict is empty; measure at least "
+                             "one (fast_fraction, hit_rate) point or pass "
+                             "an analytic curve (trace.zipf_hit_curve)")
+        if any(not 0.0 <= x <= 1.0 for x, _ in pts):
+            raise ValueError(f"hit_curve fractions must be in [0, 1], "
+                             f"got {[x for x, _ in pts]}")
+        xs = [p[0] for p in pts]
+        ys = [p[1] for p in pts]
+        # a zero fast tier hits nothing by definition; beyond the last
+        # measured point np.interp clamps to the measured value rather
+        # than assuming a perfect 100% hit rate at full residency
+        if xs[0] > 0.0:
+            xs, ys = [0.0] + xs, [0.0] + ys
+        hit_curve = lambda f, xs=xs, ys=ys: float(np.interp(f, xs, ys))
+    # ascending order so "best" really is the minimal feasible fraction
+    fractions = (sorted(fractions) if fractions is not None
+                 else [i / 20 for i in range(1, 21)])
+
+    # Eq. 4 of the datasheet fast system: min(compute, bandwidth) per
+    # chip. Independent of the measured rates, so it can actually fail.
+    fast_sys = fast_system or DIE_STACKED
+    roofline_bps = fast_sys.chip_peak_perf * chips
+
+    rows = []
+    for f in fractions:
+        h = min(max(float(hit_curve(f)), 0.0), 1.0)
+        rate = blended_bps(fast_gbps * 1e9, capacity_gbps * 1e9, h) * chips
+        rt = bytes_per_query / rate
+        per_chip = rate / chips
+        rows.append({
+            "fast_fraction": round(float(f), 4),
+            "fast_bytes": f * db_bytes,
+            "hit_rate": h,
+            "blended_gbps": rate / 1e9,
+            "response_time_s": rt,
+            "meets_sla": rt <= sla_s,
+            "chips_for_sla": math.ceil(bytes_per_query
+                                       / (sla_s * per_chip)),
+            "within_roofline": rate <= roofline_bps * (1 + 1e-9),
+        })
+    best = next((r for r in rows if r["meets_sla"]), None)
+    return {"sla_s": sla_s, "chips": chips, "rows": rows, "best": best,
+            "roofline_gbps": roofline_bps / 1e9,
+            "fast_within_roofline":
+                fast_gbps * 1e9 * chips <= roofline_bps * (1 + 1e-9)}
 
 
 def when_to_use_tpu(cfg: ArchConfig, batch: int, seq_len: int,

@@ -18,9 +18,11 @@ with REPRO_TUNE_CACHE) and is written atomically.
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 import json
 import os
+import tempfile
 import time
 from pathlib import Path
 
@@ -56,13 +58,29 @@ class TuneCache:
     def lookup(self, op: str, shape_key: str):
         return self._load().get(self.key(op, shape_key))
 
+    def entries(self) -> dict:
+        """All cached {key: entry} pairs (read-only view for consumers
+        that scan the cache, e.g. repro.tier.measured_fast_gbps)."""
+        return dict(self._load())
+
     def store(self, op: str, shape_key: str, entry: dict) -> None:
         data = self._load()
         data[self.key(op, shape_key)] = entry
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = self.path.with_name(self.path.name + ".tmp")
-        tmp.write_text(json.dumps(data, indent=1, sort_keys=True))
-        tmp.replace(self.path)
+        # unique temp file per writer + atomic rename: concurrent bench/CI
+        # runs may lose each other's *entries* (last rename wins) but can
+        # never interleave bytes into one file and leave it truncated
+        fd, tmp = tempfile.mkstemp(dir=self.path.parent,
+                                   prefix=self.path.name + ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(json.dumps(data, indent=1, sort_keys=True))
+            os.replace(tmp, self.path)
+        except BaseException:
+            with contextlib.suppress(OSError):
+                os.unlink(tmp)
+            raise
 
 
 _cache: TuneCache | None = None

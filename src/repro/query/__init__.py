@@ -3,7 +3,10 @@
 Logical plans (Pred/And/Or trees + multi-column aggregates) compile to
 kernel-dispatch physical operators, shard row-wise across a mesh, and batch
 through the shared EDF deadline scheduler — with measured throughput fed
-back to the analytical provisioning model in repro.core.
+back to the analytical provisioning model in repro.core. With
+`QueryEngine(table, tiered=...)` the same execution path runs against a
+two-tier memory system (repro.tier): per-chunk bytes are reported to the
+placement engine and latency/admission are charged at per-tier rates.
 """
 from repro.query.engine import QueryEngine, QueryResult
 from repro.query.plan import And, Or, Plan, Pred, Predicate, Query

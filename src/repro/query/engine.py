@@ -13,7 +13,13 @@ The runtime embodiment of the paper's serving story for analytic scans:
   `core_perf` roofline the provisioning regimes assume (model_check) and
   re-provision from *attained* rather than datasheet throughput
   (provision) — the loop between repro.core's analytical model and the
-  executable system.
+  executable system;
+- with `tiered=` a repro.tier.PlacementEngine, the table is treated as
+  split across a fast (die-stacked) and a capacity (DDR) tier: every
+  query's per-chunk bytes are reported to the placement engine, latency is
+  charged per chunk at its tier's rate (the tiered latency model), and
+  admission feasibility uses the blended rate. Placement never changes
+  answers — execution is identical; only the time/energy accounting moves.
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ class _Pending:
     query: Query
     bytes_scanned: int
     submitted_at: float
+    chunks: dict | None = None      # tiered mode: per-chunk byte counts
 
 
 @dataclass
@@ -47,6 +54,7 @@ class QueryResult:
     latency_s: float
     deadline: float
     met: bool
+    tier: dict | None = None        # tiered mode: byte split + modeled s
 
 
 class QueryEngine:
@@ -56,12 +64,31 @@ class QueryEngine:
     replaced by the measured cumulative scan rate as soon as one query has
     executed, so feasibility decisions track attained (not assumed)
     throughput.
+
+    tiered: a repro.tier.PlacementEngine built over this table. Queries
+    still execute (and answer) exactly as in flat mode, but service time
+    is *modeled* — each referenced chunk charged at the rate of the tier
+    it resides in — and seconds_total accumulates modeled service, so
+    measured_bps (and with it admission feasibility) becomes the blended
+    tier rate. Tiered mode requires an advanceable clock (e.g.
+    serve.sla.VirtualClock) so deadlines live on the same modeled time
+    axis the service charges advance.
     """
 
     def __init__(self, table, *, mode=KernelMode.AUTO,
-                 clock=time.perf_counter, est_gbps: float = 1.0):
+                 clock=time.perf_counter, est_gbps: float = 1.0,
+                 tiered=None):
         self.table = table
         self.mode = KernelMode(mode)
+        self.tiered = tiered
+        if tiered is not None and not hasattr(clock, "advance"):
+            # modeled service needs a modeled time axis: pricing admission
+            # at tier rates while deadlines tick on the wall clock would
+            # compare incommensurate quantities
+            raise ValueError(
+                "tiered mode models service time, so deadlines must live "
+                "on an advanceable clock; pass "
+                "clock=repro.serve.sla.VirtualClock()")
         self.clock = clock
         self.queue = DeadlineQueue(clock, self._est_service_s)
         self.reports: list[SLAReport] = []
@@ -88,9 +115,25 @@ class QueryEngine:
         return physical.referenced_bytes(query.plan(), query.aggregates,
                                          self.table.columns)
 
+    def chunk_accesses(self, query: Query) -> dict:
+        """Per-(column, chunk) bytes this query streams, in the tiered
+        placement engine's chunking (sharded tables report device-resident
+        bytes, padding included)."""
+        if self.tiered is None:
+            raise ValueError("chunk accounting needs tiered=PlacementEngine")
+        cr = self.tiered.chunk_rows
+        if self.sharded:
+            return self.table.chunk_bytes(query.plan(), query.aggregates,
+                                          cr)
+        return physical.referenced_chunk_bytes(
+            query.plan(), query.aggregates, self.table.columns, cr)
+
     # --- admission --------------------------------------------------------
     @property
     def measured_bps(self) -> float:
+        if self.tiered is not None:
+            # blended tier rate at the measured (or resident) hit fraction
+            return self.tiered.blended_measured_bps(self.n_shards)
         if self.seconds_total > 0:
             return self.bytes_total / self.seconds_total
         return self._est_gbps * 1e9
@@ -105,12 +148,21 @@ class QueryEngine:
     def submit(self, query: Query, deadline: float = math.inf) -> int | None:
         """Admit a query under a deadline (absolute clock time). Returns
         the query id, or None if the deadline is already infeasible.
-        Malformed queries raise ValueError."""
+        Malformed queries raise ValueError.
+
+        In tiered mode the admission estimate, bytes_total, and the
+        service charge all use the placement engine's chunk accounting
+        (device-resident bytes, shard padding included) — one byte basis,
+        so an admitted estimate and the charged service can't diverge."""
         physical.bind_check(query.plan(), query.aggregates,
                             self.table.columns)
         self._qid += 1
-        pend = _Pending(self._qid, query, self.bytes_scanned(query),
-                        self.clock())
+        chunks = (self.chunk_accesses(query) if self.tiered is not None
+                  else None)
+        nbytes = (sum(chunks.values()) if chunks is not None
+                  else self.bytes_scanned(query))
+        pend = _Pending(self._qid, query, nbytes, self.clock(),
+                        chunks=chunks)
         return pend.qid if self.queue.push(pend, deadline) else None
 
     # --- execution --------------------------------------------------------
@@ -132,12 +184,25 @@ class QueryEngine:
                 break
             pend, deadline = got
             t0 = self.clock()
-            # finalize inside _execute forces the device sync, so t1 - t0
-            # covers the full scan
             aggs = self._execute(pend.query)
-            t1 = self.clock()
+            tier_info = None
+            if self.tiered is not None:
+                # charge the modeled tiered service time instead of wall
+                # time: each chunk at the rate of the tier it lived in
+                acc = self.tiered.on_access(pend.chunks)
+                service = self.tiered.service_s(acc, self.n_shards)
+                t1 = self.clock.advance(service)
+                self.seconds_total += service
+                tier_info = {"fast_bytes": acc.fast_bytes,
+                             "capacity_bytes": acc.capacity_bytes,
+                             "hit_fraction": acc.hit_fraction,
+                             "service_s": service}
+            else:
+                # finalize inside _execute forces the device sync, so
+                # t1 - t0 covers the full scan
+                t1 = self.clock()
+                self.seconds_total += max(t1 - t0, 1e-12)
             self.bytes_total += pend.bytes_scanned
-            self.seconds_total += max(t1 - t0, 1e-12)
             count = next(iter(aggs.values()))["count"]
             res = QueryResult(
                 qid=pend.qid, query=pend.query, aggregates=aggs,
@@ -145,7 +210,7 @@ class QueryEngine:
                 selectivity=count / max(self.num_rows, 1),
                 bytes_scanned=pend.bytes_scanned,
                 latency_s=t1 - pend.submitted_at,
-                deadline=deadline, met=t1 <= deadline)
+                deadline=deadline, met=t1 <= deadline, tier=tier_info)
             self.reports.append(SLAReport(
                 rid=pend.qid, deadline=deadline,
                 submitted_at=pend.submitted_at, finished_at=t1,
@@ -160,6 +225,8 @@ class QueryEngine:
         out["bytes_scanned"] = self.bytes_total
         out["measured_gbps"] = (self.bytes_total / self.seconds_total / 1e9
                                 if self.seconds_total > 0 else 0.0)
+        if self.tiered is not None:
+            out["tier"] = self.tiered.stats(self.n_shards)
         return out
 
     def model_check(self, system=None) -> dict:
@@ -167,10 +234,14 @@ class QueryEngine:
         (chips = shards): the number the provisioning regimes assume each
         chip sustains, checked against what the kernels attained."""
         from repro.core.systems import TPU_V5E, as_paper_system
+        if self.seconds_total <= 0:
+            raise ValueError(
+                "no measured throughput to check the model against "
+                "(seconds_total=0); submit() and run() at least one query "
+                "before model_check()")
         sys_ = system or as_paper_system(TPU_V5E)
         model_bps = sys_.chip_peak_perf * self.n_shards
-        measured = (self.bytes_total / self.seconds_total
-                    if self.seconds_total > 0 else 0.0)
+        measured = self.bytes_total / self.seconds_total
         return {
             "system": sys_.name,
             "chips": self.n_shards,

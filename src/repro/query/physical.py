@@ -23,6 +23,7 @@ and per-shard inside repro.query.sharded's shard_map.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any
 
@@ -151,6 +152,54 @@ def referenced_bytes(plan: Plan, aggregates, columns: dict) -> int:
     footprint (the model's `percent accessed` numerator)."""
     return sum(columns[c].nbytes
                for c in columns_of(plan) | set(aggregates))
+
+
+# --- chunk-granular accounting (repro.tier placement) ---------------------
+
+def align_chunk_rows(columns: dict, chunk_rows: int) -> int:
+    """Round `chunk_rows` up so a row-range boundary is a word boundary
+    for every column (multiple of each width's codes-per-word). The one
+    alignment invariant shared by tier chunking and shard splitting
+    (ShardedTable.shard sizes rows_per_shard through this)."""
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows={chunk_rows} must be >= 1")
+    align = math.lcm(*(32 // c.code_bits for c in columns.values()))
+    return -(-chunk_rows // align) * align
+
+
+def column_chunk_bytes(total_words: int, code_bits: int,
+                       chunk_rows: int) -> list[int]:
+    """Packed bytes per row-chunk of one column (last chunk ragged).
+    `chunk_rows` must already be word-aligned for this width."""
+    wpc = chunk_rows * code_bits // 32
+    return [4 * (min((i + 1) * wpc, total_words) - i * wpc)
+            for i in range(-(-total_words // wpc))]
+
+
+def chunk_universe(source: dict, chunk_rows: int,
+                   names=None) -> dict[tuple[str, int], int]:
+    """(column, chunk-index) -> bytes over `source` columns (objects with
+    `.words`/`.code_bits` — table columns or sharded slices). The single
+    enumeration shared by the placement universe, flat-table accounting,
+    and sharded accounting, so chunk-id semantics cannot diverge.
+    `chunk_rows` must already be aligned (align_chunk_rows)."""
+    out: dict[tuple[str, int], int] = {}
+    for name in (sorted(names) if names is not None else source):
+        col = source[name]
+        for i, b in enumerate(column_chunk_bytes(
+                int(col.words.size), col.code_bits, chunk_rows)):
+            out[(name, i)] = b
+    return out
+
+
+def referenced_chunk_bytes(plan: Plan, aggregates, columns: dict,
+                           chunk_rows: int) -> dict[tuple[str, int], int]:
+    """Per-(column, chunk) bytes a query streams — the access record the
+    tier placement engine charges. Scans stream every chunk of every
+    referenced column; the split across tiers is the placement engine's
+    decision, the byte totals are this layer's ground truth."""
+    return chunk_universe(columns, align_chunk_rows(columns, chunk_rows),
+                          names=columns_of(plan) | set(aggregates))
 
 
 def execute(plan: Plan, aggregates: tuple, slices: dict[str, ColumnSlice],

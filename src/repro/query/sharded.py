@@ -14,7 +14,6 @@ engine compares the two.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -66,10 +65,8 @@ class ShardedTable:
             raise ValueError(f"mesh has no axis {axis!r}; axes are "
                              f"{tuple(mesh.shape)}")
         n = int(mesh.shape[axis])
-        align = math.lcm(*(32 // c.code_bits
-                           for c in table.columns.values()))
-        rps = -(-table.num_rows // n)
-        rps = max(align, -(-rps // align) * align)
+        rps = physical.align_chunk_rows(table.columns,
+                                        max(1, -(-table.num_rows // n)))
         total_rows = rps * n
         sharding = NamedSharding(mesh, P(axis))
         slices = {}
@@ -84,6 +81,19 @@ class ShardedTable:
                 jax.device_put(jnp.asarray(valid), sharding),
                 col.code_bits)
         return cls(table, mesh, axis, rps, slices)
+
+    # --- tier accounting --------------------------------------------------
+    def chunk_bytes(self, plan, aggregates,
+                    chunk_rows: int) -> dict[tuple[str, int], int]:
+        """Per-(column, chunk) *device-resident* bytes this query streams
+        (shard-alignment padding included — padded words cross the memory
+        bus like real ones), reported to the tier placement engine. Chunk
+        ids live in the padded row space; when `chunk_rows` divides
+        rows_per_shard no chunk straddles a shard boundary."""
+        return physical.chunk_universe(
+            self.slices,
+            physical.align_chunk_rows(self.table.columns, chunk_rows),
+            names=self._referenced(plan, tuple(aggregates)))
 
     # --- execution --------------------------------------------------------
     def _referenced(self, plan, aggregates: tuple) -> tuple:

@@ -15,6 +15,12 @@ Both share this module:
 - `SLAReport` / `summarize`: attained-vs-promised latency (p50/p99 and
   attainment fraction), the numbers the provisioning model's predictions
   are checked against in production.
+- `blended_bps` / `VirtualClock`: tiered-memory service estimation. When a
+  table spans a fast (die-stacked) and a capacity (DDR) tier, admission
+  feasibility must be priced at the *blended* rate the placement engine
+  attains, not either tier's datasheet rate; `VirtualClock` lets the
+  tiered latency model drive deadlines deterministically in benchmarks
+  and tests.
 """
 from __future__ import annotations
 
@@ -106,6 +112,39 @@ class DeadlineQueue:
     def ordered_items(self) -> list:
         """Queued items in deadline order (inspection/tests only)."""
         return [e.item for e in sorted(self._heap)]
+
+
+def blended_bps(fast_bps: float, capacity_bps: float,
+                fast_fraction: float) -> float:
+    """Effective service rate when `fast_fraction` of the bytes stream
+    from the fast tier and the rest from the capacity tier (harmonic
+    blend — time adds, bandwidth doesn't). This is the rate admission
+    control must use for a tiered table: pricing feasibility at the fast
+    tier's rate admits queries the capacity tier then misses."""
+    if fast_bps <= 0 or capacity_bps <= 0:
+        raise ValueError(f"tier rates must be positive, got fast={fast_bps} "
+                         f"capacity={capacity_bps}")
+    f = min(max(fast_fraction, 0.0), 1.0)
+    return 1.0 / (f / fast_bps + (1.0 - f) / capacity_bps)
+
+
+class VirtualClock:
+    """A manually-advanced clock with the same callable interface as
+    time.monotonic: deadline machinery (DeadlineQueue, QueryEngine) runs
+    on modeled service times instead of wall time, so tier placement
+    experiments are deterministic and CPU-speed-independent."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot advance a clock by {dt} s")
+        self.now += dt
+        return self.now
 
 
 def summarize(reports: list[SLAReport], rejected: int = 0) -> dict:

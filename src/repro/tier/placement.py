@@ -1,0 +1,272 @@
+"""Chunk-granular tier placement: memory, cache, or memcache.
+
+Bakhshalipour et al. (arXiv 1809.08828) show die-stacked DRAM can serve as
+plain *memory* (OS-placed, static), a hardware *cache* (demand promotion,
+LRU eviction), or a software *memcache* (frequency-aware admission) — and
+that which wins depends on the workload's locality. This module makes the
+three designs executable against the query engine's tables:
+
+- a table's packed columns are split into row-aligned *chunks* (the unit
+  of placement, see query.physical.referenced_chunk_bytes);
+- `PlacementEngine` assigns each chunk to the fast (die-stacked) or
+  capacity (DDR) tier under a `TieredBudget`, updating placement on every
+  access according to the chosen `Policy`;
+- all policy state is host-side numpy (tier assignment, LRU clocks,
+  frequency counters, ghost bits) — the same bookkeeping discipline as the
+  serve engine's cache_len/slot tables: placement decisions never enter
+  the traced computation, so query *answers* are bit-exact regardless of
+  policy; only the latency/energy accounting changes.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.tier.tiers import TieredBudget, TierPair
+
+
+class Policy(str, enum.Enum):
+    STATIC = "static"        # memory-style: pinned once, never moves
+    CACHE = "cache"          # hardware-cache-style: LRU promotion/eviction
+    MEMCACHE = "memcache"    # software-cache-style: frequency-aware
+    #                          admission with a ghost list
+
+
+@dataclass
+class Access:
+    """One query's byte split across tiers (the placement engine's answer
+    to "how fast was that scan")."""
+
+    fast_bytes: int = 0
+    capacity_bytes: int = 0
+    n_hit: int = 0           # chunks served from the fast tier
+    n_miss: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.fast_bytes + self.capacity_bytes
+
+    @property
+    def hit_fraction(self) -> float:
+        """Byte-weighted fast-tier fraction of this access."""
+        t = self.total_bytes
+        return self.fast_bytes / t if t else 0.0
+
+
+class PlacementEngine:
+    """Placement of (column, chunk) ids across a fast/capacity TierPair.
+
+    Charging rule (all three policies): a chunk is charged at the tier it
+    resided in *when the access arrived* — a promotion triggered by a miss
+    does not retroactively discount that miss.
+    """
+
+    def __init__(self, chunk_ids: list[tuple[str, int]],
+                 chunk_nbytes: list[int], tiers: TierPair, policy: Policy,
+                 *, chunk_rows: int, pin_order: list[int] | None = None,
+                 age_every: int = 1024):
+        if not chunk_ids:
+            raise ValueError("placement needs at least one chunk")
+        self.ids = list(chunk_ids)
+        self.index = {cid: i for i, cid in enumerate(self.ids)}
+        self.nbytes = np.asarray(chunk_nbytes, np.int64)
+        self.tiers = tiers
+        self.policy = Policy(policy)
+        self.chunk_rows = int(chunk_rows)
+        self.budget = TieredBudget(tiers.fast.capacity)
+        n = len(self.ids)
+        self.in_fast = np.zeros(n, bool)
+        self.last_access = np.zeros(n, np.int64)      # LRU clock per chunk
+        self.freq = np.zeros(n, np.int64)             # MEMCACHE counters
+        self.ghost = np.zeros(n, bool)                # recently evicted
+        self._clock = 0
+        self._touches = 0
+        self.age_every = int(age_every)
+        # cumulative accounting
+        self.fast_bytes_total = 0
+        self.capacity_bytes_total = 0
+        self.hits_total = 0
+        self.misses_total = 0
+        self.energy_j_total = 0.0
+        if self.policy is Policy.STATIC:
+            for i in (pin_order if pin_order is not None else range(n)):
+                if self.budget.fits(int(self.nbytes[i])):
+                    self.budget.alloc(int(self.nbytes[i]))
+                    self.in_fast[i] = True
+
+    # --- construction from tables -----------------------------------------
+    @classmethod
+    def for_table(cls, table, tiers: TierPair, policy: Policy,
+                  chunk_rows: int = 4096,
+                  hot_columns: tuple[str, ...] = (), **kw
+                  ) -> "PlacementEngine":
+        """Chunk a Table or ShardedTable into the placement universe.
+
+        Sharded tables are chunked over their padded (device-resident) word
+        arrays — the same byte totals ShardedTable.chunk_bytes reports.
+        `hot_columns` orders STATIC pinning (an operator hint: pin these
+        first); other policies ignore it.
+        """
+        from repro.query import physical
+
+        chunk_rows = physical.align_chunk_rows(table.columns, chunk_rows)
+        source = (table.slices if hasattr(table, "slices")
+                  else table.columns)
+        universe = physical.chunk_universe(source, chunk_rows)
+        ids = list(universe)
+        nbytes = list(universe.values())
+        order = None
+        if hot_columns:
+            rank = {c: r for r, c in enumerate(hot_columns)}
+            order = sorted(range(len(ids)),
+                           key=lambda i: (rank.get(ids[i][0], len(rank)),
+                                          i))
+        return cls(ids, nbytes, tiers, policy, chunk_rows=chunk_rows,
+                   pin_order=order, **kw)
+
+    # --- inspection -------------------------------------------------------
+    @property
+    def total_bytes(self) -> int:
+        return int(self.nbytes.sum())
+
+    @property
+    def resident_fast_fraction(self) -> float:
+        """Fraction of the table's bytes currently in the fast tier."""
+        return float(self.nbytes[self.in_fast].sum()) / self.total_bytes
+
+    @property
+    def hit_rate(self) -> float:
+        """Cumulative byte-weighted fast-tier hit rate."""
+        t = self.fast_bytes_total + self.capacity_bytes_total
+        return self.fast_bytes_total / t if t else 0.0
+
+    def blended_measured_bps(self, chips: int = 1) -> float:
+        """The admission-control rate: harmonic blend of the tier rates at
+        the *measured* hit fraction (before any access: at the resident
+        fast fraction — exact for STATIC, conservative for cold caches)."""
+        t = self.fast_bytes_total + self.capacity_bytes_total
+        frac = self.hit_rate if t else self.resident_fast_fraction
+        return self.tiers.blended(frac, chips)
+
+    def service_s(self, access: Access, chips: int = 1) -> float:
+        """The tiered latency model: each tier's bytes at that tier's
+        rate, `chips` shards streaming in parallel."""
+        return self.tiers.service_s(access.fast_bytes,
+                                    access.capacity_bytes, chips)
+
+    def stats(self, chips: int = 1) -> dict:
+        """Cumulative placement accounting; pass the shard count so
+        blended_gbps is on the same aggregate scale as the engine's
+        measured_gbps."""
+        return {
+            "policy": self.policy.value,
+            "chunks": len(self.ids),
+            "chunk_rows": self.chunk_rows,
+            "table_bytes": self.total_bytes,
+            "fast_capacity_bytes": int(self.budget.fast_capacity),
+            "fast_resident_fraction": self.resident_fast_fraction,
+            "hit_rate": self.hit_rate,
+            "fast_bytes": int(self.fast_bytes_total),
+            "capacity_bytes": int(self.capacity_bytes_total),
+            "chunk_hits": self.hits_total,
+            "chunk_misses": self.misses_total,
+            "energy_j": self.energy_j_total,
+            "blended_gbps": self.blended_measured_bps(chips) / 1e9,
+        }
+
+    # --- the access path --------------------------------------------------
+    def on_access(self, chunk_bytes: dict[tuple[str, int], int]) -> Access:
+        """Charge one query's per-chunk byte counts and update placement.
+
+        `chunk_bytes` comes from query.physical.referenced_chunk_bytes or
+        ShardedTable.chunk_bytes with this engine's chunk_rows. Returns the
+        query's byte split; cumulative totals feed hit_rate and the
+        blended admission rate.
+        """
+        acc = Access()
+        for cid, b in chunk_bytes.items():
+            i = self.index.get(cid)
+            if i is None:
+                raise ValueError(
+                    f"unknown chunk {cid!r}; placement was built with "
+                    f"chunk_rows={self.chunk_rows} over "
+                    f"{sorted({c for c, _ in self.ids})}")
+            self._clock += 1
+            hit = bool(self.in_fast[i])
+            if hit:
+                acc.fast_bytes += b
+                acc.n_hit += 1
+                self.last_access[i] = self._clock
+            else:
+                acc.capacity_bytes += b
+                acc.n_miss += 1
+            if self.policy is Policy.CACHE:
+                self._cache_touch(i, hit)
+            elif self.policy is Policy.MEMCACHE:
+                self._memcache_touch(i, hit)
+        self.fast_bytes_total += acc.fast_bytes
+        self.capacity_bytes_total += acc.capacity_bytes
+        self.hits_total += acc.n_hit
+        self.misses_total += acc.n_miss
+        self.energy_j_total += self.tiers.energy_j(acc.fast_bytes,
+                                                   acc.capacity_bytes)
+        return acc
+
+    # --- CACHE: LRU promotion/eviction ------------------------------------
+    def _evict_lru(self, need: int, floor_freq: int | None = None) -> bool:
+        """Evict coldest fast chunks until `need` bytes are free. With
+        `floor_freq`, refuse (and evict nothing) unless every victim is
+        strictly colder than that frequency — MEMCACHE's admission test."""
+        fast = np.flatnonzero(self.in_fast)
+        # victim order: coldest-by-frequency (MEMCACHE) or least-recently
+        # used (CACHE), LRU/index tie-breaks keep it deterministic
+        order = fast[np.lexsort((fast, self.last_access[fast],
+                                 self.freq[fast]))] \
+            if floor_freq is not None else fast[np.argsort(
+                self.last_access[fast], kind="stable")]
+        victims, freed = [], 0
+        for v in order:
+            if freed >= need:
+                break
+            if floor_freq is not None and self.freq[v] >= floor_freq:
+                return False
+            victims.append(v)
+            freed += int(self.nbytes[v])
+        if freed < need:
+            return False
+        for v in victims:
+            self.in_fast[v] = False
+            self.ghost[v] = True
+            self.budget.free(int(self.nbytes[v]))
+        return True
+
+    def _cache_touch(self, i: int, hit: bool) -> None:
+        if hit:
+            return
+        b = int(self.nbytes[i])
+        need = b - int(self.budget.remaining)
+        if need > 0 and not self._evict_lru(need):
+            return                    # chunk larger than the whole tier
+        self.budget.alloc(b)
+        self.in_fast[i] = True
+        self.last_access[i] = self._clock
+
+    # --- MEMCACHE: frequency-aware admission with a ghost list ------------
+    def _memcache_touch(self, i: int, hit: bool) -> None:
+        self.freq[i] += 2 if self.ghost[i] else 1   # ghost re-touch bonus
+        self.ghost[i] = False
+        self._touches += 1
+        if self._touches % self.age_every == 0:
+            self.freq >>= 1            # periodic aging keeps counters adaptive
+        if hit:
+            return
+        b = int(self.nbytes[i])
+        need = b - int(self.budget.remaining)
+        if need > 0 and not self._evict_lru(need,
+                                            floor_freq=int(self.freq[i])):
+            return                     # incumbents are hotter: not admitted
+        self.budget.alloc(b)
+        self.in_fast[i] = True
+        self.last_access[i] = self._clock

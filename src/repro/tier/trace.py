@@ -1,0 +1,139 @@
+"""Seeded skewed query traces: the workload that makes tiering matter.
+
+"Processing Data Where It Makes Sense" (Mutlu et al., PAPERS.md): placement
+must follow access skew. A production analytics service with millions of
+users produces exactly that — a few dashboards (columns) absorb most of
+the scans. This module generates that stream reproducibly:
+
+- column popularity is zipfian with exponent `skew`, over a *scrambled*
+  rank->column permutation (YCSB-style), so the hot set is not the first
+  columns in table order and STATIC first-fit pinning cannot win by
+  accident;
+- each query is a predicate scan + aggregate whose constant is drawn from
+  a selectivity mix (point-ish, medium, broad), with a fraction of
+  two-column conjunctions;
+- queries carry a tenant id — interleaved multi-tenant streams share the
+  global hot set but differ in query mix (even tenants run selective
+  probes, odd tenants broad rollups).
+
+Everything is driven by one numpy Generator seeded from `TraceSpec.seed`:
+the same spec always yields the same trace, so placement-policy
+comparisons and bit-exactness tests are reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.query.plan import Pred, Query
+
+
+@dataclass(frozen=True)
+class TraceSpec:
+    n_queries: int = 200
+    skew: float = 1.1            # zipf exponent over column popularity
+    seed: int = 0
+    tenants: int = 4
+    selectivities: tuple = (0.1, 0.5, 0.9)
+    p_compound: float = 0.25     # fraction of two-predicate AND queries
+
+
+@dataclass(frozen=True)
+class TracedQuery:
+    tenant: int
+    query: Query
+
+
+def zipf_weights(n: int, skew: float) -> np.ndarray:
+    """Normalized zipfian popularity over ranks 0..n-1 (skew=0: uniform)."""
+    if n < 1:
+        raise ValueError(f"need at least one item, got n={n}")
+    w = 1.0 / np.arange(1, n + 1, dtype=float) ** skew
+    return w / w.sum()
+
+
+def zipf_hit_curve(n: int, skew: float):
+    """fraction-of-items-resident -> fraction-of-accesses-hit, for a
+    zipfian popularity with the hottest items resident (the analytic
+    best-case curve advise_tier_split searches against)."""
+    cum = np.concatenate([[0.0], np.cumsum(zipf_weights(n, skew))])
+
+    def hit(fraction: float) -> float:
+        k = min(max(fraction, 0.0), 1.0) * n
+        lo = int(k)
+        if lo >= n:
+            return 1.0
+        return float(cum[lo] + (k - lo) * (cum[lo + 1] - cum[lo]))
+
+    return hit
+
+
+def make_trace(table, spec: TraceSpec = TraceSpec()) -> list[TracedQuery]:
+    """A skewed multi-tenant stream of Query objects over `table`.
+
+    Popularity is assigned to a seeded permutation of the columns; each
+    query draws its predicate column and aggregate column from that
+    distribution (so chunk heat concentrates on the zipf head), a
+    selectivity from the mix, and a tenant id round-robin-ish at random.
+    """
+    cols = list(table.columns)
+    if len(cols) < 2:
+        raise ValueError("trace needs a table with >= 2 columns")
+    rng = np.random.default_rng(spec.seed)
+    scrambled = list(rng.permutation(cols))          # rank r -> column
+    weights = zipf_weights(len(cols), spec.skew)
+    out: list[TracedQuery] = []
+    for _ in range(spec.n_queries):
+        tenant = int(rng.integers(spec.tenants))
+        # even tenants probe selectively, odd tenants run broad rollups
+        mix = (spec.selectivities[:1 + len(spec.selectivities) // 2]
+               if tenant % 2 == 0 else spec.selectivities)
+        sel = float(rng.choice(mix))
+        ranks = rng.choice(len(cols), size=min(3, len(cols)),
+                           replace=False, p=weights)
+        pred_col, agg_col = scrambled[ranks[0]], scrambled[ranks[1]]
+        vmax = (1 << (table.columns[pred_col].code_bits - 1)) - 1
+        plan = Pred(pred_col, "lt", max(1, round(sel * (vmax + 1))))
+        if len(ranks) > 2 and rng.random() < spec.p_compound:
+            c2 = scrambled[ranks[2]]
+            v2 = (1 << (table.columns[c2].code_bits - 1)) - 1
+            plan = plan & Pred(c2, "le", max(1, round(0.9 * v2)))
+        out.append(TracedQuery(tenant, Query(plan, aggregates=(agg_col,))))
+    return out
+
+
+def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
+                 chunk_rows: int = 1024, warmup_fraction: float = 1 / 3,
+                 mode: str = "xla_ref"):
+    """Closed-loop replay of a trace against a tiered QueryEngine — the
+    one attainment methodology shared by benchmarks/tier_bench.py,
+    examples/tiered_store.py, and tests.
+
+    With `sla_s`, the first `warmup_fraction` of the trace runs
+    deadline-free (a cold cache admission-rejecting its own warmup would
+    measure the rejection spiral, not the policy) and attainment is
+    measured on the rest, counting admission rejections as misses.
+    Returns (placement_engine, query_engine, attainment); without
+    `sla_s` the whole trace replays deadline-free and attainment is None
+    (there was no SLA to attain — not 0%).
+    """
+    from repro.query import QueryEngine
+    from repro.serve.sla import VirtualClock
+    from repro.tier.placement import PlacementEngine
+
+    pe = PlacementEngine.for_table(table, tiers, policy,
+                                   chunk_rows=chunk_rows)
+    clk = VirtualClock()
+    eng = QueryEngine(table, mode=mode, tiered=pe, clock=clk)
+    warmup = int(len(trace) * warmup_fraction) if sla_s is not None else \
+        len(trace)
+    met = offered = 0
+    for i, tq in enumerate(trace):
+        measured = i >= warmup
+        deadline = clk() + sla_s if measured else float("inf")
+        offered += measured
+        if eng.submit(tq.query, deadline=deadline) is None:
+            continue
+        met += sum(r.met for r in eng.run() if measured)
+    return pe, eng, met / offered if offered else None

@@ -146,6 +146,56 @@ def test_tune_fit_clamps_to_divisor():
     assert tune.fit(7, 4) == 1
 
 
+def test_corrupt_cache_file_is_a_miss_not_a_crash(tmp_path):
+    """A truncated/garbage cache file (e.g. a killed bench run under the
+    old non-atomic writer) must behave like an empty cache: best_params
+    falls back to defaults, autotune re-sweeps and rewrites valid JSON."""
+    path = tmp_path / "tune.json"
+    path.write_text('{"scan_filter|cpu|rows=8": {"params": {"block')
+    tune.set_cache_path(path)
+    try:
+        assert tune.best_params("scan_filter", "rows=8",
+                                {"block_rows": 77}) == {"block_rows": 77}
+        entry = tune.autotune("fake_op", "rows=8", {"block_rows": (4, 8)},
+                              lambda p: None, repeat=1)
+        assert entry["params"]["block_rows"] in (4, 8)
+        raw = json.loads(path.read_text())      # valid JSON again
+        assert f"fake_op|{jax.default_backend()}|rows=8" in raw
+    finally:
+        tune.set_cache_path(None)
+
+
+def test_store_leaves_no_temp_files(tmp_path):
+    """Atomic write discipline: after store() only the cache file remains
+    (unique temp + os.replace, so concurrent writers can't interleave)."""
+    cache = tune.set_cache_path(tmp_path / "tune.json")
+    try:
+        cache.store("op", "rows=1", {"params": {"b": 1}, "us": 1.0})
+        assert [p.name for p in tmp_path.iterdir()] == ["tune.json"]
+    finally:
+        tune.set_cache_path(None)
+
+
+def test_repro_tune_cache_env_override_roundtrip(tmp_path, monkeypatch):
+    """REPRO_TUNE_CACHE redirects the cache file: entries stored under the
+    override land at that path and are read back by a fresh cache object
+    (the documented TPU-retune workflow)."""
+    override = tmp_path / "elsewhere" / "tpu_tune.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(override))
+    try:
+        assert tune.cache_path() == override
+        cache = tune.set_cache_path(None)       # re-resolve from the env
+        assert cache.path == override
+        cache.store("op", "rows=2", {"params": {"b": 2}, "us": 1.0})
+        assert override.exists()
+        fresh = tune.TuneCache()                # new object, same env
+        assert fresh.lookup("op", "rows=2")["params"] == {"b": 2}
+        monkeypatch.delenv("REPRO_TUNE_CACHE")
+        assert tune.cache_path() != override    # back to the default
+    finally:
+        tune.set_cache_path(None)
+
+
 # --------------------------------------------------------------------------
 # ragged shapes: the scan/aggregate kernels pad instead of asserting
 # --------------------------------------------------------------------------

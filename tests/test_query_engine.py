@@ -226,6 +226,21 @@ class TestEngineSLA:
         assert adv.design.compute_chips >= 1
         assert adv.design.response_time <= 0.1 * 1.01
 
+    def test_model_check_before_any_query_raises(self, table):
+        """Regression: zero measured throughput is a degenerate model
+        comparison, not a silent row of zeros."""
+        with pytest.raises(ValueError, match="model_check"):
+            QueryEngine(table).model_check()
+
+    def test_calibration_guards_degenerate_throughput(self):
+        from repro.core.advisor import calibrated_system
+        from repro.core.systems import DIE_STACKED
+        for bad in (0.0, -5.0, float("nan"), float("inf")):
+            with pytest.raises(ValueError, match="degenerate"):
+                calibrated_system(DIE_STACKED, bad)
+        ok = calibrated_system(DIE_STACKED, 8e9)
+        assert ok.chip_peak_perf == pytest.approx(8e9)
+
 
 class TestLegacyWrappers:
     """db.queries routes through the same execution path."""
