@@ -24,6 +24,7 @@ MODULES = (
     "benchmarks.kernels_bench",
     "benchmarks.queries_bench",
     "benchmarks.tier_bench",
+    "benchmarks.energy_bench",
     "benchmarks.roofline_table",
 )
 

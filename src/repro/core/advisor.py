@@ -208,6 +208,43 @@ def advise_tier_split(db_bytes: float, bytes_per_query: float, sla_s: float,
                 fast_gbps * 1e9 * chips <= roofline_bps * (1 + 1e-9)}
 
 
+def advise_cost(db_bytes: float, bytes_per_query: float, sla_s: float,
+                power_budget_w: float, *, skew: float | None = None,
+                fast_gbps: float | None = None, sheet=None,
+                measured_energy_j: float | None = None,
+                measured_latency_s: float | None = None) -> dict:
+    """The paper's full three-axis question: given an SLA, a power
+    envelope, and a workload, which architecture is cheapest per query?
+
+    Delegates to repro.energy.tco.cheapest_architecture (Table-1 systems
+    performance-provisioned for the SLA, power-infeasible ones excluded,
+    plus — with `skew` — a two-tier node at the zipf hit curve's blended
+    rate; `fast_gbps` prices the fast tier from the measured autotune
+    sweep). With `measured_energy_j`/`measured_latency_s` from a metered
+    run (EnergyMeter + QueryEngine), the winner's $/query is re-priced at
+    the *measured* operating point alongside the datasheet figure, the
+    same model-vs-measured loop as model_check()/provision().
+    """
+    from repro.energy import tco
+
+    cell = tco.cheapest_architecture(
+        db_bytes, bytes_per_query, sla_s, power_budget_w, skew=skew,
+        sheet=sheet or tco.DEFAULT_COSTS, fast_gbps=fast_gbps)
+    if measured_energy_j is not None or measured_latency_s is not None:
+        if measured_energy_j is None or measured_latency_s is None:
+            raise ValueError(
+                "measured re-pricing needs both measured_energy_j and "
+                "measured_latency_s (one without the other mixes "
+                "datasheet and metered terms in a single $/query)")
+        win = next((c for c in cell["candidates"]
+                    if c["name"] == cell["winner"]), None)
+        if win is not None:
+            cell["usd_per_query_measured"] = tco.usd_per_query(
+                win["capex_usd"], measured_latency_s, measured_energy_j,
+                sheet or tco.DEFAULT_COSTS)
+    return cell
+
+
 def when_to_use_tpu(cfg: ArchConfig, batch: int, seq_len: int,
                     slas=(0.005, 0.020, 0.100, 0.500)) -> list[dict]:
     """The paper's Fig. 3 question for 2026: at which per-token SLAs does

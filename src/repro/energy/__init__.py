@@ -1,0 +1,31 @@
+"""Energy & cost-effectiveness engine: the paper's other two axes.
+
+PR 2/3 made the *performance* axis executable (sharded SLA queries, tiered
+placement); this package adds power and cost, so the paper's "when to use
+die-stacked memory" question becomes a three-axis decision:
+
+- `meter`:  EnergyMeter — a per-query/per-tenant joules ledger charging
+            bytes-moved-per-tier plus compute-power x modeled busy time;
+            replaces the tier module's single energy scalar.
+- `caps`:   PowerCap — a sliding-window watt governor that derates
+            effective bandwidth (stretches modeled service) so no window
+            ever averages above budget, and feeds the derated estimate
+            back into EDF admission.
+- `tco`:    CostSheet / usd_per_query / decision_surface — capex + metered
+            opex per query, and the SLA x skew x power-budget grid naming
+            the cheapest architecture per cell.
+"""
+from repro.energy.caps import PowerCap
+from repro.energy.meter import EnergyCharge, EnergyMeter, chip_compute_watts
+from repro.energy.tco import (CostSheet, DEFAULT_COSTS, capex_usd,
+                              cheapest_architecture, decision_surface,
+                              evaluate_system, evaluate_tiered,
+                              usd_per_query)
+
+__all__ = [
+    "EnergyMeter", "EnergyCharge", "chip_compute_watts",
+    "PowerCap",
+    "CostSheet", "DEFAULT_COSTS", "capex_usd", "usd_per_query",
+    "evaluate_system", "evaluate_tiered", "cheapest_architecture",
+    "decision_surface",
+]

@@ -41,6 +41,7 @@ class _Pending:
     bytes_scanned: int
     submitted_at: float
     chunks: dict | None = None      # tiered mode: per-chunk byte counts
+    tenant: int = 0                 # energy-ledger attribution
 
 
 @dataclass
@@ -77,10 +78,11 @@ class QueryEngine:
 
     def __init__(self, table, *, mode=KernelMode.AUTO,
                  clock=time.perf_counter, est_gbps: float = 1.0,
-                 tiered=None):
+                 tiered=None, power_cap=None):
         self.table = table
         self.mode = KernelMode(mode)
         self.tiered = tiered
+        self.power_cap = power_cap
         if tiered is not None and not hasattr(clock, "advance"):
             # modeled service needs a modeled time axis: pricing admission
             # at tier rates while deadlines tick on the wall clock would
@@ -89,6 +91,13 @@ class QueryEngine:
                 "tiered mode models service time, so deadlines must live "
                 "on an advanceable clock; pass "
                 "clock=repro.serve.sla.VirtualClock()")
+        if power_cap is not None and tiered is None:
+            # the governor throttles *modeled* service and prices queries
+            # from the placement engine's energy meter; without tiering
+            # there is neither a joules ledger nor a rate to derate
+            raise ValueError(
+                "power_cap needs the tiered energy model; pass "
+                "tiered=repro.tier.PlacementEngine(...) as well")
         self.clock = clock
         self.queue = DeadlineQueue(clock, self._est_service_s)
         self.reports: list[SLAReport] = []
@@ -138,14 +147,31 @@ class QueryEngine:
             return self.bytes_total / self.seconds_total
         return self._est_gbps * 1e9
 
+    def _projected_energy_j(self, p: _Pending, busy_s: float) -> float:
+        """Admission-time joules estimate: memory term from the *current*
+        residency (PlacementEngine.project — no state touched), compute
+        term at the meter's chip power over the modeled busy time."""
+        split = self.tiered.project(p.chunks)
+        meter = self.tiered.meter
+        return (meter.tiers.energy_j(split.fast_bytes, split.capacity_bytes)
+                + meter.compute_w * self.n_shards * busy_s)
+
     def _est_service_s(self, p: _Pending) -> float:
-        return p.bytes_scanned / max(self.measured_bps, 1e-9)
+        est = p.bytes_scanned / max(self.measured_bps, 1e-9)
+        if self.power_cap is not None:
+            # feasibility must be priced at the power-derated rate: a
+            # query the governor would stretch past its deadline is
+            # rejected here instead of silently running over budget
+            est = self.power_cap.throttled_service_s(
+                self.clock(), self._projected_energy_j(p, est), est)
+        return est
 
     @property
     def rejected(self) -> list[int]:
         return [p.qid for p in self.queue.rejected]
 
-    def submit(self, query: Query, deadline: float = math.inf) -> int | None:
+    def submit(self, query: Query, deadline: float = math.inf,
+               tenant: int = 0) -> int | None:
         """Admit a query under a deadline (absolute clock time). Returns
         the query id, or None if the deadline is already infeasible.
         Malformed queries raise ValueError.
@@ -153,7 +179,8 @@ class QueryEngine:
         In tiered mode the admission estimate, bytes_total, and the
         service charge all use the placement engine's chunk accounting
         (device-resident bytes, shard padding included) — one byte basis,
-        so an admitted estimate and the charged service can't diverge."""
+        so an admitted estimate and the charged service can't diverge.
+        `tenant` tags the query's line on the energy meter."""
         physical.bind_check(query.plan(), query.aggregates,
                             self.table.columns)
         self._qid += 1
@@ -162,7 +189,7 @@ class QueryEngine:
         nbytes = (sum(chunks.values()) if chunks is not None
                   else self.bytes_scanned(query))
         pend = _Pending(self._qid, query, nbytes, self.clock(),
-                        chunks=chunks)
+                        chunks=chunks, tenant=tenant)
         return pend.qid if self.queue.push(pend, deadline) else None
 
     # --- execution --------------------------------------------------------
@@ -189,14 +216,30 @@ class QueryEngine:
             if self.tiered is not None:
                 # charge the modeled tiered service time instead of wall
                 # time: each chunk at the rate of the tier it lived in
-                acc = self.tiered.on_access(pend.chunks)
-                service = self.tiered.service_s(acc, self.n_shards)
+                acc = self.tiered.on_access(pend.chunks, qid=pend.qid,
+                                            tenant=pend.tenant)
+                busy = self.tiered.service_s(acc, self.n_shards)
+                self.tiered.meter.charge_compute(acc.charge, busy,
+                                                 self.n_shards)
+                service = busy
+                if self.power_cap is not None:
+                    # race-to-idle throttling: the governor stretches wall
+                    # time until no watt window exceeds budget; joules are
+                    # fixed at the busy-time charge, the chip idles the rest
+                    service = self.power_cap.throttled_service_s(
+                        t0, acc.charge.total_j, busy)
+                    self.power_cap.record(t0, t0 + service,
+                                          acc.charge.total_j,
+                                          natural_s=busy)
                 t1 = self.clock.advance(service)
                 self.seconds_total += service
                 tier_info = {"fast_bytes": acc.fast_bytes,
                              "capacity_bytes": acc.capacity_bytes,
                              "hit_fraction": acc.hit_fraction,
-                             "service_s": service}
+                             "service_s": service,
+                             "energy_j": acc.charge.total_j}
+                if self.power_cap is not None:
+                    tier_info["throttle_s"] = service - busy
             else:
                 # finalize inside _execute forces the device sync, so
                 # t1 - t0 covers the full scan
@@ -227,6 +270,9 @@ class QueryEngine:
                                 if self.seconds_total > 0 else 0.0)
         if self.tiered is not None:
             out["tier"] = self.tiered.stats(self.n_shards)
+            out["energy"] = self.tiered.meter.summary()
+        if self.power_cap is not None:
+            out["power"] = self.power_cap.report(now=self.clock())
         return out
 
     def model_check(self, system=None) -> dict:

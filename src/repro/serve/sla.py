@@ -25,6 +25,7 @@ Both share this module:
 from __future__ import annotations
 
 import heapq
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -121,9 +122,14 @@ def blended_bps(fast_bps: float, capacity_bps: float,
     blend — time adds, bandwidth doesn't). This is the rate admission
     control must use for a tiered table: pricing feasibility at the fast
     tier's rate admits queries the capacity tier then misses."""
-    if fast_bps <= 0 or capacity_bps <= 0:
-        raise ValueError(f"tier rates must be positive, got fast={fast_bps} "
-                         f"capacity={capacity_bps}")
+    if not (math.isfinite(fast_bps) and math.isfinite(capacity_bps)) \
+            or fast_bps <= 0 or capacity_bps <= 0:
+        raise ValueError(f"tier rates must be finite and positive, got "
+                         f"fast={fast_bps} capacity={capacity_bps}")
+    if not math.isfinite(fast_fraction):
+        raise ValueError(f"fast_fraction={fast_fraction} must be finite; "
+                         f"a NaN hit rate means the byte accounting "
+                         f"upstream is broken")
     f = min(max(fast_fraction, 0.0), 1.0)
     return 1.0 / (f / fast_bps + (1.0 - f) / capacity_bps)
 
@@ -141,8 +147,11 @@ class VirtualClock:
         return self.now
 
     def advance(self, dt: float) -> float:
-        if dt < 0:
-            raise ValueError(f"cannot advance a clock by {dt} s")
+        if not math.isfinite(dt) or dt < 0:
+            # a NaN dt would pass a bare `dt < 0` check and silently
+            # poison every later deadline comparison
+            raise ValueError(f"cannot advance a clock by {dt} s; dt must "
+                             f"be finite and non-negative")
         self.now += dt
         return self.now
 

@@ -21,9 +21,11 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass
+from typing import Any
 
 import numpy as np
 
+from repro.energy.meter import EnergyMeter
 from repro.tier.tiers import TieredBudget, TierPair
 
 
@@ -43,6 +45,7 @@ class Access:
     capacity_bytes: int = 0
     n_hit: int = 0           # chunks served from the fast tier
     n_miss: int = 0
+    charge: Any = None       # the EnergyMeter line this access opened
 
     @property
     def total_bytes(self) -> int:
@@ -66,7 +69,7 @@ class PlacementEngine:
     def __init__(self, chunk_ids: list[tuple[str, int]],
                  chunk_nbytes: list[int], tiers: TierPair, policy: Policy,
                  *, chunk_rows: int, pin_order: list[int] | None = None,
-                 age_every: int = 1024):
+                 age_every: int = 1024, meter: EnergyMeter | None = None):
         if not chunk_ids:
             raise ValueError("placement needs at least one chunk")
         self.ids = list(chunk_ids)
@@ -84,12 +87,15 @@ class PlacementEngine:
         self._clock = 0
         self._touches = 0
         self.age_every = int(age_every)
-        # cumulative accounting
+        # cumulative accounting; joules live in the EnergyMeter ledger
+        # (per-query/per-tenant lines), not a scalar — a default meter
+        # charges memory only (compute_w=0), which keeps energy_j_total
+        # exactly what the old scalar accumulated
+        self.meter = meter if meter is not None else EnergyMeter(tiers)
         self.fast_bytes_total = 0
         self.capacity_bytes_total = 0
         self.hits_total = 0
         self.misses_total = 0
-        self.energy_j_total = 0.0
         if self.policy is Policy.STATIC:
             for i in (pin_order if pin_order is not None else range(n)):
                 if self.budget.fits(int(self.nbytes[i])):
@@ -142,6 +148,12 @@ class PlacementEngine:
         t = self.fast_bytes_total + self.capacity_bytes_total
         return self.fast_bytes_total / t if t else 0.0
 
+    @property
+    def energy_j_total(self) -> float:
+        """Memory joules streamed so far — the pre-meter scalar, now the
+        exact sum of the ledger's per-tier memory lines."""
+        return self.meter.memory_j
+
     def blended_measured_bps(self, chips: int = 1) -> float:
         """The admission-control rate: harmonic blend of the tier rates at
         the *measured* hit fraction (before any access: at the resident
@@ -176,14 +188,38 @@ class PlacementEngine:
             "blended_gbps": self.blended_measured_bps(chips) / 1e9,
         }
 
+    # --- admission-time projection ----------------------------------------
+    def project(self, chunk_bytes: dict[tuple[str, int], int]) -> Access:
+        """The byte split this access would see if it arrived now, WITHOUT
+        touching placement state — admission estimates must not advance
+        LRU clocks, frequency counters, or the energy ledger."""
+        acc = Access()
+        for cid, b in chunk_bytes.items():
+            i = self.index.get(cid)
+            if i is None:
+                raise ValueError(
+                    f"unknown chunk {cid!r}; placement was built with "
+                    f"chunk_rows={self.chunk_rows} over "
+                    f"{sorted({c for c, _ in self.ids})}")
+            if self.in_fast[i]:
+                acc.fast_bytes += b
+                acc.n_hit += 1
+            else:
+                acc.capacity_bytes += b
+                acc.n_miss += 1
+        return acc
+
     # --- the access path --------------------------------------------------
-    def on_access(self, chunk_bytes: dict[tuple[str, int], int]) -> Access:
+    def on_access(self, chunk_bytes: dict[tuple[str, int], int], *,
+                  qid: int | None = None,
+                  tenant: int | None = None) -> Access:
         """Charge one query's per-chunk byte counts and update placement.
 
         `chunk_bytes` comes from query.physical.referenced_chunk_bytes or
         ShardedTable.chunk_bytes with this engine's chunk_rows. Returns the
         query's byte split; cumulative totals feed hit_rate and the
-        blended admission rate.
+        blended admission rate, and the byte split opens a line on the
+        energy meter (tagged qid/tenant for the per-tenant bill).
         """
         acc = Access()
         for cid, b in chunk_bytes.items():
@@ -210,8 +246,8 @@ class PlacementEngine:
         self.capacity_bytes_total += acc.capacity_bytes
         self.hits_total += acc.n_hit
         self.misses_total += acc.n_miss
-        self.energy_j_total += self.tiers.energy_j(acc.fast_bytes,
-                                                   acc.capacity_bytes)
+        acc.charge = self.meter.charge(acc.fast_bytes, acc.capacity_bytes,
+                                       qid=qid, tenant=tenant)
         return acc
 
     # --- CACHE: LRU promotion/eviction ------------------------------------

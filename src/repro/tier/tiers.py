@@ -14,6 +14,7 @@ the database.
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
 
 from repro.core.systems import DIE_STACKED, TRADITIONAL, SystemSpec
@@ -115,9 +116,25 @@ class TierPair:
         return (fast_bytes / (self.fast.bandwidth * chips)
                 + capacity_bytes / (self.capacity.bandwidth * chips))
 
+    def energy_components(self, fast_bytes: float, capacity_bytes: float
+                          ) -> tuple[float, float]:
+        """(fast_j, capacity_j) of a byte split — the one place the
+        per-tier pricing formula lives (the EnergyMeter ledger and
+        energy_j both build on it)."""
+        for name, b in (("fast_bytes", fast_bytes),
+                        ("capacity_bytes", capacity_bytes)):
+            if not math.isfinite(b) or b < 0:
+                raise ValueError(
+                    f"{name}={b} must be a finite non-negative byte count; "
+                    f"energy charges from broken byte accounting would "
+                    f"silently poison the meter's ledger")
+        return (fast_bytes * self.fast.energy_per_byte,
+                capacity_bytes * self.capacity.energy_per_byte)
+
     def energy_j(self, fast_bytes: float, capacity_bytes: float) -> float:
-        return (fast_bytes * self.fast.energy_per_byte
-                + capacity_bytes * self.capacity.energy_per_byte)
+        fast_j, capacity_j = self.energy_components(fast_bytes,
+                                                    capacity_bytes)
+        return fast_j + capacity_j
 
 
 def paper_tiers(fast_capacity: float, *, fast_gbps: float | None = None,

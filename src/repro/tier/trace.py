@@ -105,7 +105,8 @@ def make_trace(table, spec: TraceSpec = TraceSpec()) -> list[TracedQuery]:
 
 def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
                  chunk_rows: int = 1024, warmup_fraction: float = 1 / 3,
-                 mode: str = "xla_ref"):
+                 mode: str = "xla_ref", compute_w: float = 0.0,
+                 power_cap=None):
     """Closed-loop replay of a trace against a tiered QueryEngine — the
     one attainment methodology shared by benchmarks/tier_bench.py,
     examples/tiered_store.py, and tests.
@@ -117,15 +118,24 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
     Returns (placement_engine, query_engine, attainment); without
     `sla_s` the whole trace replays deadline-free and attainment is None
     (there was no SLA to attain — not 0%).
+
+    Each query's tenant id tags its line on the energy meter; `compute_w`
+    adds the per-chip compute term (repro.energy.meter) and `power_cap` a
+    sliding-window watt governor (repro.energy.caps) — power-throttled
+    service then counts against the same deadlines, so attainment reports
+    the SLA cost of the cap.
     """
+    from repro.energy.meter import EnergyMeter
     from repro.query import QueryEngine
     from repro.serve.sla import VirtualClock
     from repro.tier.placement import PlacementEngine
 
     pe = PlacementEngine.for_table(table, tiers, policy,
-                                   chunk_rows=chunk_rows)
+                                   chunk_rows=chunk_rows,
+                                   meter=EnergyMeter(tiers, compute_w))
     clk = VirtualClock()
-    eng = QueryEngine(table, mode=mode, tiered=pe, clock=clk)
+    eng = QueryEngine(table, mode=mode, tiered=pe, clock=clk,
+                      power_cap=power_cap)
     warmup = int(len(trace) * warmup_fraction) if sla_s is not None else \
         len(trace)
     met = offered = 0
@@ -133,7 +143,8 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
         measured = i >= warmup
         deadline = clk() + sla_s if measured else float("inf")
         offered += measured
-        if eng.submit(tq.query, deadline=deadline) is None:
+        if eng.submit(tq.query, deadline=deadline,
+                      tenant=tq.tenant) is None:
             continue
         met += sum(r.met for r in eng.run() if measured)
     return pe, eng, met / offered if offered else None

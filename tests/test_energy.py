@@ -1,0 +1,501 @@
+"""Energy & cost engine (repro.energy) + query-path integration.
+
+The load-bearing guarantees:
+- the EnergyMeter ledger bills every query its per-tier memory joules plus
+  compute x busy time, tagged qid/tenant, and its memory_j is exactly the
+  old PlacementEngine.energy_j_total scalar;
+- a PowerCap-governed replay NEVER exceeds its watt budget over ANY
+  sliding window (exact check, property-tested on seeded random streams)
+  while still reporting SLA attainment — power-infeasible queries are
+  rejected at admission, not silently run over budget;
+- decision_surface reproduces the paper's qualitative verdict on
+  datasheet inputs: die-stacking wins strict SLAs (<= 10 ms), loses on
+  power at relaxed SLAs, crossover consistent with power_crossover_sla;
+- cross-checks tie core.provisioning.power_crossover_sla to the fig4
+  power-provisioning benchmark and the TCO model at one operating point.
+"""
+import json
+import math
+import os
+import re
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import (DIE_STACKED, TRADITIONAL, Workload,
+                        power_crossover_sla, provision_performance,
+                        provision_power)
+from repro.core.advisor import advise_cost
+from repro.core.systems import TiB
+from repro.db import Table
+from repro.energy import (CostSheet, EnergyMeter, PowerCap,
+                          cheapest_architecture, chip_compute_watts,
+                          decision_surface, evaluate_system,
+                          evaluate_tiered, usd_per_query)
+from repro.query import Pred, Query, QueryEngine
+from repro.serve.sla import VirtualClock
+from repro.tier import (PlacementEngine, Policy, TraceSpec, make_trace,
+                        paper_tiers, replay_trace)
+
+WL = Workload(16 * TiB, 0.20)
+DB, BPQ = 16 * TiB, 0.20 * 16 * TiB
+
+
+@pytest.fixture(scope="module")
+def table():
+    return Table.synthetic("energy", 4096,
+                           {f"c{i:02d}": 8 for i in range(8)}, seed=1)
+
+
+@pytest.fixture(scope="module")
+def tiers(table):
+    return paper_tiers(table.nbytes * 0.25, fast_gbps=0.016)
+
+
+# --------------------------------------------------------------------------
+# meter: the joules ledger
+# --------------------------------------------------------------------------
+class TestEnergyMeter:
+    def test_charge_components(self, tiers):
+        m = EnergyMeter(tiers, compute_w=2.0)
+        ch = m.charge(1000, 500, qid=7, tenant=3)
+        assert ch.fast_j == pytest.approx(1000 * tiers.fast.energy_per_byte)
+        assert ch.capacity_j == pytest.approx(
+            500 * tiers.capacity.energy_per_byte)
+        assert ch.compute_j == 0.0
+        m.charge_compute(ch, busy_s=0.5, chips=4)
+        assert ch.compute_j == pytest.approx(2.0 * 4 * 0.5)
+        assert ch.total_j == pytest.approx(ch.fast_j + ch.capacity_j
+                                           + ch.compute_j)
+        assert ch.as_dict()["qid"] == 7
+
+    def test_by_tenant_bill(self, tiers):
+        m = EnergyMeter(tiers)
+        m.charge(100, 0, tenant=0)
+        m.charge(200, 0, tenant=1)
+        m.charge(300, 0, tenant=1)
+        bill = m.by_tenant()
+        assert bill[1]["queries"] == 2
+        assert bill[1]["total_j"] == pytest.approx(
+            500 * tiers.fast.energy_per_byte)
+        assert m.summary()["queries"] == 3
+        assert m.total_j == pytest.approx(m.memory_j)   # compute_w=0
+
+    def test_chip_compute_watts_from_table1(self):
+        # die-stacked: 32 saturating cores x 3 W
+        assert chip_compute_watts(DIE_STACKED) == pytest.approx(96.0)
+        with pytest.raises(ValueError, match="cores"):
+            chip_compute_watts(DIE_STACKED, cores=0)
+
+    def test_meter_guards_inputs(self, tiers):
+        with pytest.raises(ValueError, match="compute_w"):
+            EnergyMeter(tiers, compute_w=-1.0)
+        with pytest.raises(ValueError, match="compute_w"):
+            EnergyMeter(tiers, compute_w=float("nan"))
+        m = EnergyMeter(tiers)
+        with pytest.raises(ValueError, match="fast_bytes"):
+            m.charge(-1, 0)
+        with pytest.raises(ValueError, match="busy_s"):
+            m.charge_compute(m.charge(1, 1), busy_s=-0.1)
+
+
+class TestEnergyValidation:
+    """Satellite: non-finite/negative inputs rejected with actionable
+    errors in TierPair.energy_j and serve.sla.blended_bps."""
+
+    def test_energy_j_rejects_bad_bytes(self, tiers):
+        for bad in (-1, float("nan"), float("inf")):
+            with pytest.raises(ValueError, match="finite non-negative"):
+                tiers.energy_j(bad, 0)
+            with pytest.raises(ValueError, match="capacity_bytes"):
+                tiers.energy_j(0, bad)
+        assert tiers.energy_j(0, 0) == 0.0
+
+    def test_blended_bps_rejects_nonfinite(self):
+        from repro.serve.sla import blended_bps
+        with pytest.raises(ValueError, match="finite"):
+            blended_bps(float("nan"), 4e9, 0.5)
+        with pytest.raises(ValueError, match="finite"):
+            blended_bps(1e9, float("inf"), 0.5)
+        with pytest.raises(ValueError, match="fast_fraction"):
+            blended_bps(1e9, 4e9, float("nan"))
+
+
+# --------------------------------------------------------------------------
+# caps: the sliding-window governor
+# --------------------------------------------------------------------------
+class TestPowerCap:
+    def test_guards_construction_and_record(self):
+        with pytest.raises(ValueError, match="budget_w"):
+            PowerCap(0.0, 1.0)
+        with pytest.raises(ValueError, match="window_s"):
+            PowerCap(10.0, float("inf"))
+        cap = PowerCap(10.0, 1.0)
+        with pytest.raises(ValueError, match="forward"):
+            cap.record(2.0, 1.0, 1.0)
+        with pytest.raises(ValueError, match="joules"):
+            cap.record(0.0, 1.0, -1.0)
+        with pytest.raises(ValueError, match="zero-length"):
+            cap.record(1.0, 1.0, 5.0)
+        cap.record(0.0, 1.0, 5.0)
+        with pytest.raises(ValueError, match="time-ordered"):
+            cap.record(-1.0, 2.0, 1.0)
+
+    def test_max_window_watts_exact(self):
+        cap = PowerCap(100.0, 1.0)
+        cap.record(0.0, 0.5, 10.0)          # 20 W for 0.5 s
+        assert cap.max_window_watts() == pytest.approx(10.0)  # 10 J / 1 s
+        # a second burst 0.25 s later: worst window holds both fully
+        cap.record(0.75, 1.0, 10.0)
+        assert cap.max_window_watts() == pytest.approx(20.0)
+        # window ending at 1.0 holds both: 20 J / 1 s
+        assert cap.watts(1.0) == pytest.approx(20.0)
+        # a distant burst never shares a window
+        cap.record(10.0, 10.5, 10.0)
+        assert cap.max_window_watts() == pytest.approx(20.0)
+
+    def test_throttle_floor_is_e_over_budget(self):
+        """A lone query hotter than the whole window budget must stretch
+        to joules/budget; a cooler one keeps its natural service."""
+        cap = PowerCap(budget_w=10.0, window_s=1.0)
+        assert cap.throttled_service_s(0.0, 5.0, 0.01) == pytest.approx(
+            0.01)                           # 5 J < 10 J per window
+        s = cap.throttled_service_s(0.0, 25.0, 0.01)
+        assert s == pytest.approx(25.0 / 10.0, rel=1e-6)
+        assert cap.throttled_service_s(0.0, 0.0, 0.25) == 0.25
+
+    def test_congested_window_stretches_follower(self):
+        """After a burst that fills the budget, the next query must slide
+        its energy out of the shared window."""
+        cap = PowerCap(budget_w=10.0, window_s=1.0)
+        s0 = cap.throttled_service_s(0.0, 10.0, 0.1)
+        cap.record(0.0, s0, 10.0)
+        s1 = cap.throttled_service_s(s0, 5.0, 0.1)
+        assert s1 > 0.1                     # the window still holds 10 J
+        cap.record(s0, s0 + s1, 5.0)
+        assert cap.max_window_watts() <= 10.0 * (1 + 1e-9)
+
+    def test_tiny_service_does_not_collapse_to_zero_segment(self):
+        """Regression: a natural service below ulp(now) must not let the
+        trial segment collapse to zero length (its joules would vanish
+        from the window check and the subsequent record() would raise)."""
+        cap = PowerCap(10.0, 1.0)
+        cap.record(0.0, 1.0, 10.0)          # window at budget already
+        s = cap.throttled_service_s(1.0, 3.0, 0.0)
+        assert 1.0 + s > 1.0                # representable at now=1.0
+        cap.record(1.0, 1.0 + s, 3.0, natural_s=0.0)   # must not raise
+        assert cap.max_window_watts() <= 10.0 * (1 + 1e-9)
+        assert cap.throttled_queries == 1
+        assert cap.throttle_s_total == pytest.approx(s)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_property_random_stream_never_over_budget(self, seed):
+        """Seeded randomized property: any mix of query energies, natural
+        service times, and idle gaps, governed then recorded, keeps EVERY
+        window at or under budget (exact max, not sampled)."""
+        rng = np.random.default_rng(seed)
+        budget = float(rng.uniform(5.0, 50.0))
+        window = float(rng.uniform(0.1, 2.0))
+        cap = PowerCap(budget, window)
+        now = 0.0
+        for _ in range(60):
+            joules = float(rng.gamma(2.0, budget * window / 4))
+            natural = float(rng.gamma(2.0, window / 20))
+            s = cap.throttled_service_s(now, joules, natural)
+            assert s >= natural
+            cap.record(now, now + s, joules)
+            now += s + (float(rng.exponential(window / 4))
+                        if rng.random() < 0.5 else 0.0)
+        assert cap.max_window_watts() <= budget * (1 + 1e-9)
+        assert len(cap) == 60
+
+
+# --------------------------------------------------------------------------
+# engine integration: metered queries, capped execution, admission feedback
+# --------------------------------------------------------------------------
+class TestMeteredEngine:
+    def run_capped(self, table, tiers, budget_w, sla_s=0.010,
+                   n_queries=45, compute_w=1e-3):
+        trace = make_trace(table, TraceSpec(n_queries=n_queries, skew=1.1,
+                                            seed=5))
+        cap = PowerCap(budget_w, window_s=20 * sla_s) \
+            if budget_w is not None else None
+        pe, eng, att = replay_trace(table, trace, tiers, Policy.MEMCACHE,
+                                    sla_s=sla_s, chunk_rows=256,
+                                    compute_w=compute_w, power_cap=cap)
+        return pe, eng, att, cap
+
+    def test_tenant_tagged_ledger(self, table, tiers):
+        pe, eng, att, _ = self.run_capped(table, tiers, None)
+        bill = eng.summary()["energy"]["by_tenant"]
+        assert set(bill) <= {0, 1, 2, 3}
+        assert sum(t["queries"] for t in bill.values()) == \
+            len(pe.meter.charges)
+        qids = [c.qid for c in pe.meter.charges]
+        assert len(set(qids)) == len(qids)          # one line per query
+        assert eng.summary()["energy"]["compute_j"] > 0
+
+    def test_capped_replay_property(self, table, tiers):
+        """Acceptance: the governed replay never exceeds budget over any
+        window, and still reports attainment."""
+        _, eng0, att0, _ = self.run_capped(table, tiers, None)
+        demand_w = (eng0.summary()["energy"]["total_j"]
+                    / eng0.seconds_total)
+        for frac in (0.5, 0.8):
+            _, eng, att, cap = self.run_capped(table, tiers,
+                                               frac * demand_w)
+            rep = cap.report(now=eng.clock())
+            assert rep["max_window_w"] <= cap.budget_w * (1 + 1e-9), rep
+            assert att is not None and 0.0 <= att <= 1.0
+            assert att <= att0 + 1e-9       # the cap can only cost SLA
+        s = eng.summary()
+        assert s["power"]["budget_utilization"] <= 1 + 1e-9
+        assert s["power"]["segments"] == s["served"]
+
+    def test_power_infeasible_rejected_at_admission(self, table, tiers):
+        """A deadline feasible at the bandwidth rate but not at the
+        power-derated rate is rejected at submit."""
+        pe = PlacementEngine.for_table(table, tiers, Policy.STATIC,
+                                       chunk_rows=256,
+                                       meter=EnergyMeter(tiers))
+        clk = VirtualClock()
+        q = Query(Pred("c00", "lt", 64), aggregates=("c01",))
+        probe = QueryEngine(table, mode="xla_ref", tiered=pe, clock=clk)
+        nbytes = sum(probe.chunk_accesses(q).values())
+        bw_est = nbytes / probe.measured_bps
+        e_query = tiers.energy_j(*_split(pe, probe, q))
+        # budget so tight the query must stretch to ~10x its window
+        cap = PowerCap(budget_w=e_query / (10 * bw_est),
+                       window_s=bw_est)
+        pe2 = PlacementEngine.for_table(table, tiers, Policy.STATIC,
+                                        chunk_rows=256)
+        eng = QueryEngine(table, mode="xla_ref", tiered=pe2,
+                          clock=VirtualClock(), power_cap=cap)
+        assert eng.submit(q, deadline=2 * bw_est) is None     # power-bound
+        assert eng.submit(q, deadline=1e9) is not None        # just slow
+        res = eng.run()[0]
+        assert res.tier["throttle_s"] > 0
+        assert cap.max_window_watts() <= cap.budget_w * (1 + 1e-9)
+        assert res.met
+
+    def test_power_cap_requires_tiered(self, table):
+        with pytest.raises(ValueError, match="tiered"):
+            QueryEngine(table, power_cap=PowerCap(1.0, 1.0),
+                        clock=VirtualClock())
+
+    def test_project_does_not_mutate_placement(self, table, tiers):
+        pe = PlacementEngine.for_table(table, tiers, Policy.MEMCACHE,
+                                       chunk_rows=256)
+        chunks = {cid: int(pe.nbytes[i])
+                  for cid, i in list(pe.index.items())[:6]}
+        before = (pe.in_fast.copy(), pe.freq.copy(), pe.last_access.copy(),
+                  pe._clock, len(pe.meter.charges))
+        split = pe.project(chunks)
+        assert split.total_bytes == sum(chunks.values())
+        after = (pe.in_fast, pe.freq, pe.last_access, pe._clock,
+                 len(pe.meter.charges))
+        np.testing.assert_array_equal(before[0], after[0])
+        np.testing.assert_array_equal(before[1], after[1])
+        np.testing.assert_array_equal(before[2], after[2])
+        assert before[3:] == after[3:]
+        with pytest.raises(ValueError, match="unknown chunk"):
+            pe.project({("nope", 0): 4})
+
+
+def _split(pe, eng, q):
+    acc = pe.project(eng.chunk_accesses(q))
+    return acc.fast_bytes, acc.capacity_bytes
+
+
+# --------------------------------------------------------------------------
+# tco: $/query and the decision surface
+# --------------------------------------------------------------------------
+class TestTCO:
+    def test_usd_per_query_terms(self):
+        sheet = CostSheet(usd_per_kwh=0.10, amortize_s=1000.0)
+        # capex 1000 over 1000 s at 1 s/query -> $1/query capex share
+        assert usd_per_query(1000.0, 1.0, 0.0, sheet) == pytest.approx(1.0)
+        # 3.6 MJ = 1 kWh -> $0.10
+        assert usd_per_query(0.0, 1.0, 3.6e6, sheet) == pytest.approx(0.10)
+        with pytest.raises(ValueError, match="response_time"):
+            usd_per_query(1.0, 0.0, 1.0, sheet)
+        with pytest.raises(ValueError, match="energy_j"):
+            usd_per_query(1.0, 1.0, float("nan"), sheet)
+
+    def test_cost_sheet_unknown_system(self):
+        with pytest.raises(ValueError, match="no \\$/GiB price"):
+            CostSheet().mem_usd("quantum-foam")
+        # density variants inherit their base system's price
+        assert CostSheet().mem_usd("die-stacked-x8density") == \
+            CostSheet().mem_usd("die-stacked")
+
+    def test_evaluate_system_matches_provisioning(self):
+        c = evaluate_system(DIE_STACKED, WL, 0.010)
+        d = provision_performance(DIE_STACKED, WL, 0.010)
+        assert c["power_w"] == pytest.approx(d.power)
+        assert c["response_time_s"] == pytest.approx(d.response_time)
+        assert c["energy_per_query_j"] == pytest.approx(d.energy_per_query)
+        assert c["meets_sla"]
+
+    def test_die_stacking_wins_strict_slas(self):
+        """Acceptance: datasheet inputs, <= 10 ms, generous power."""
+        for sla in (0.005, 0.010):
+            cell = cheapest_architecture(DB, BPQ, sla, 1e6)
+            assert cell["winner"] == "die-stacked", cell
+
+    def test_die_stacking_loses_power_at_relaxed_slas(self):
+        """Acceptance: relaxed SLA, die-stacked is power-infeasible at a
+        budget traditional meets comfortably — it loses on power, exactly
+        the paper's 50x verdict."""
+        cell = cheapest_architecture(DB, BPQ, 1.0, 20e3)
+        by = {c["name"]: c for c in cell["candidates"]}
+        assert not by["die-stacked"]["within_power"]
+        assert by["traditional"]["feasible"]
+        assert cell["winner"] == "traditional"
+
+    def test_crossover_consistent_with_power_crossover_sla(self):
+        """The surface's candidate powers flip exactly where the paper's
+        analytical crossover says they do (~60 ms)."""
+        t_star = power_crossover_sla(TRADITIONAL, DIE_STACKED, WL)
+        assert t_star is not None
+        for sla, die_wins_power in ((t_star / 3, True), (t_star * 3, False)):
+            cell = cheapest_architecture(DB, BPQ, sla, 1e9)
+            by = {c["name"]: c for c in cell["candidates"]}
+            assert (by["die-stacked"]["power_w"]
+                    < by["traditional"]["power_w"]) == die_wins_power, sla
+
+    def test_nothing_feasible_is_honest(self):
+        cell = cheapest_architecture(DB, BPQ, 0.010, 1e3)   # 1 kW: nobody
+        assert cell["winner"] is None
+        assert cell["usd_per_query"] is None
+
+    def test_tiered_candidate_exploits_skew(self):
+        """At a strict SLA and high skew, the two-tier node undercuts the
+        pure die-stacked cluster (cold bytes live in cheap DDR)."""
+        cell = cheapest_architecture(DB, BPQ, 0.010, 1e6, skew=1.1)
+        by = {c["name"]: c for c in cell["candidates"]}
+        assert by["tiered"]["feasible"]
+        assert by["tiered"]["usd_per_query"] <= \
+            by["die-stacked"]["usd_per_query"] * (1 + 1e-9)
+        t = evaluate_tiered(DB, BPQ, 0.010, 1.1)
+        assert 0 < t["fast_fraction"] <= 1.0
+        assert t["response_time_s"] <= 0.010 * (1 + 1e-9)
+
+    def test_tiered_rejects_mismeasured_fast_rate(self):
+        """A fast rate above the datasheet Eq. 4 roofline (broken tune
+        cache) must not price a tiered candidate at an unattainable
+        operating point — every row fails the cross-check, so there is
+        no candidate at all."""
+        assert evaluate_tiered(DB, BPQ, 0.010, 1.1, fast_gbps=500.0) is None
+        cell = cheapest_architecture(DB, BPQ, 0.010, 1e6, skew=1.1,
+                                     fast_gbps=500.0)
+        assert all(c["name"] != "tiered" for c in cell["candidates"])
+
+    def test_decision_surface_grid(self):
+        surf = decision_surface(DB, BPQ, slas=(0.010, 1.0),
+                                skews=(None, 1.1),
+                                power_budgets_w=(50e3, 1e6))
+        assert len(surf["cells"]) == 8
+        for cell in surf["cells"]:
+            names = [c["name"] for c in cell["candidates"]]
+            assert names[:3] == ["traditional", "big-memory", "die-stacked"]
+            assert cell["winner"] is None or cell["winner"] in names
+
+    def test_guards_degenerate_inputs(self):
+        with pytest.raises(ValueError, match="positive"):
+            cheapest_architecture(0, 1, 0.01, 1e6)
+        with pytest.raises(ValueError, match="sla_s"):
+            cheapest_architecture(1, 1, float("nan"), 1e6)
+        with pytest.raises(ValueError, match="power_budget_w"):
+            cheapest_architecture(1, 1, 0.01, -5.0)
+
+    def test_advise_cost_measured_repricing(self):
+        cell = advise_cost(DB, BPQ, 0.010, 1e6, measured_energy_j=3.6e6,
+                           measured_latency_s=0.012)
+        assert cell["usd_per_query_measured"] > 0
+        with pytest.raises(ValueError, match="both"):
+            advise_cost(DB, BPQ, 0.010, 1e6, measured_energy_j=1.0)
+
+
+# --------------------------------------------------------------------------
+# satellite: power_crossover_sla cross-checked against fig4 + TCO
+# --------------------------------------------------------------------------
+class TestPowerCrossoverCrossChecks:
+    def test_performance_powers_meet_at_crossover(self):
+        t_star = power_crossover_sla(TRADITIONAL, DIE_STACKED, WL)
+        p_trad = provision_performance(TRADITIONAL, WL, t_star).power
+        p_die = provision_performance(DIE_STACKED, WL, t_star).power
+        # the scan interpolates in log-t between 4000 samples; the power
+        # curves are steppy (ceil of chips), so "equal" is a few percent
+        assert p_trad == pytest.approx(p_die, rel=0.05)
+
+    def test_inverse_consistency_with_power_provisioning(self):
+        """fig4's machinery approximately inverts the crossover: a
+        cluster power-provisioned at the crossover power lands near the
+        crossover SLA. Not exact by design — provision_power populates
+        blades at full cores (the paper's §5.2 assumption), so at relaxed
+        SLAs it buys more compute than performance provisioning would
+        (traditional lands ~1.3x slower, die-stacked ~0.9x) — but the two
+        regimes must agree at the shared operating point within the
+        blade-quantization band."""
+        t_star = power_crossover_sla(TRADITIONAL, DIE_STACKED, WL)
+        for sys_ in (TRADITIONAL, DIE_STACKED):
+            p = provision_performance(sys_, WL, t_star).power
+            rt = provision_power(sys_, WL, p).response_time
+            assert t_star / 2 <= rt <= t_star * 2, (sys_.name, rt, t_star)
+
+    def test_fig4_bench_rows_match_provision_power(self):
+        """The fig4 benchmark's derived strings are the model's numbers,
+        not a drifted copy."""
+        import benchmarks.fig4_power_provisioning as fig4
+        for name, _, derived in fig4.rows():
+            budget = float(re.search(r"/(\d+)kW/", name).group(1)) * 1e3
+            sys_name = name.rsplit("/", 1)[1]
+            sys_ = {s.name: s for s in (TRADITIONAL, DIE_STACKED)}.get(
+                sys_name)
+            if sys_ is None:
+                continue
+            d = provision_power(sys_, fig4.WL, budget)
+            rt_ms = float(re.search(r"rt=([\d.]+)ms", derived).group(1))
+            pw_kw = float(re.search(r"power=([\d.]+)kW", derived).group(1))
+            assert rt_ms == pytest.approx(d.response_time * 1e3, abs=0.05)
+            assert pw_kw == pytest.approx(d.power / 1e3, abs=0.05)
+
+    def test_tco_power_ordering_flips_with_crossover(self):
+        """The TCO model's energy-per-query ordering at the crossover's
+        two sides matches the analytical model's power ordering."""
+        t_star = power_crossover_sla(TRADITIONAL, DIE_STACKED, WL)
+        strict = {c["name"]: c for c in cheapest_architecture(
+            DB, BPQ, t_star / 3, 1e9)["candidates"]}
+        relaxed = {c["name"]: c for c in cheapest_architecture(
+            DB, BPQ, t_star * 3, 1e9)["candidates"]}
+        assert strict["die-stacked"]["energy_per_query_j"] < \
+            strict["traditional"]["energy_per_query_j"]
+        assert relaxed["die-stacked"]["energy_per_query_j"] > \
+            relaxed["traditional"]["energy_per_query_j"]
+
+
+# --------------------------------------------------------------------------
+# bench wiring: run.py --only energy appends to BENCH_energy.json
+# --------------------------------------------------------------------------
+def test_energy_bench_appends_record(tmp_path, monkeypatch, capsys):
+    import benchmarks.energy_bench as energy_bench
+    import benchmarks.run as bench_run
+    monkeypatch.setenv("REPRO_ENERGY_BENCH_QUICK", "1")
+    monkeypatch.setattr(energy_bench, "BENCH_PATH", tmp_path / "B.json")
+    # "energy_bench", not "energy": the substring filter would also pull
+    # in benchmarks.fig6_energy
+    bench_run.main(["--only", "energy_bench", "--json"])
+    records = json.loads(capsys.readouterr().out)
+    assert any(r["name"].startswith("energy/") for r in records)
+    hist = json.loads((tmp_path / "B.json").read_text())
+    assert len(hist) == 1
+    rec = hist[0]
+    assert rec["replay"]["capped"]["budget_utilization"] <= 1 + 1e-9
+    assert rec["replay"]["by_tenant"]
+    assert all(w is None or isinstance(w, str)
+               for w in rec["surface"]["winners"].values())
+    assert math.isfinite(rec["replay"]["demand_w"])

@@ -10,7 +10,37 @@ from repro.configs.base import ShapeSpec
 from repro.models import lm
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.scheduler import SLAScheduler
+from repro.serve.sla import VirtualClock
 from repro.train.metrics import MetricsLogger
+
+
+class TestVirtualClock:
+    """Edge cases of the modeled time axis every tiered/energy deadline
+    experiment runs on."""
+
+    def test_zero_duration_advance_is_identity(self):
+        clk = VirtualClock(5.0)
+        assert clk.advance(0.0) == 5.0
+        assert clk() == 5.0
+
+    def test_monotone_under_interleaved_advances(self):
+        clk = VirtualClock()
+        rng = np.random.default_rng(0)
+        seen = [clk()]
+        for dt in rng.gamma(1.0, 0.01, size=100):
+            clk.advance(float(dt))
+            seen.append(clk())
+            clk.advance(0.0)                # interleaved no-ops
+            seen.append(clk())
+        assert (np.diff(seen) >= 0).all()
+        assert clk() == pytest.approx(clk.now)
+
+    def test_rejects_backwards_and_nonfinite_time(self):
+        clk = VirtualClock(1.0)
+        for bad in (-1e-12, -1.0, float("nan"), float("inf")):
+            with pytest.raises(ValueError, match="advance"):
+                clk.advance(bad)
+        assert clk() == 1.0                 # rejected advances don't move it
 
 
 class FakeClock:

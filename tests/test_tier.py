@@ -231,6 +231,26 @@ class TestPlacement:
         with pytest.raises(ValueError, match="unknown chunk"):
             pe.on_access({("nope", 0): 4})
 
+    def test_energy_ledger_bit_compatible_with_old_scalar(self, table,
+                                                          trace, tiers):
+        """Satellite regression: the meter replaced the energy_j_total
+        scalar, but stats()["energy_j"] must stay bit-compatible — the
+        old per-access accumulation reproduced exactly by the sum of the
+        ledger's per-charge memory lines."""
+        pe, _, _ = run_trace(table, trace[:30], Policy.CACHE, tiers)
+        ledger = pe.meter.charges
+        assert len(ledger) == 30            # one charge per query
+        old_style = 0.0                     # the pre-meter accumulation
+        for c in ledger:
+            old_style += tiers.energy_j(c.fast_bytes, c.capacity_bytes)
+        assert pe.stats()["energy_j"] == old_style          # bitwise
+        assert pe.energy_j_total == sum(c.memory_j for c in ledger)
+        m = pe.meter.summary()                # the canonical breakdown
+        assert m["fast_j"] + m["capacity_j"] == \
+            pytest.approx(pe.stats()["energy_j"])
+        assert m["compute_j"] == 0.0          # no compute_w: memory only
+        assert m["total_j"] == pytest.approx(pe.stats()["energy_j"])
+
     def test_sharded_chunk_accounting(self, table, tiers):
         """ShardedTable reports device-resident (padding-included) chunk
         bytes and runs the tiered path end-to-end."""
