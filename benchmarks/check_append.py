@@ -1,0 +1,102 @@
+"""Parameterized BENCH_*.json append checks for CI smoke steps.
+
+Every benchmark module appends one record per run to its trajectory file;
+the CI smoke steps used to each carry a copy-pasted inline Python block
+asserting the append happened and the record is sane. This script is that
+check, once, parameterized by bench name:
+
+    python benchmarks/check_append.py tier energy store
+
+Each check asserts (a) the trajectory exists and is a non-empty list and
+(b) the latest record carries the bench's invariants — the same
+assertions the inline blocks made, plus the new store contract.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _load(name: str) -> tuple[list, dict]:
+    path = ROOT / f"BENCH_{name}.json"
+    assert path.exists(), f"{path.name} missing: the {name} bench did " \
+        f"not append a record"
+    hist = json.loads(path.read_text())
+    assert isinstance(hist, list) and hist, \
+        f"{path.name} holds no records"
+    return hist, hist[-1]
+
+
+def check_kernels() -> str:
+    hist, rec = _load("kernels")
+    assert rec["tuned_gbps"] > 0 and rec["speedup"] > 0, rec
+    return (f"{len(hist)} record(s), last: {rec['op']} "
+            f"{rec['default_gbps']}->{rec['tuned_gbps']} GB/s "
+            f"({rec['speedup']}x)")
+
+
+def check_queries() -> str:
+    hist, rec = _load("queries")
+    assert rec["scan_agg_gbps"] > 0 and rec["n_shards"] >= 1, rec
+    assert rec["sla_vs_load"], rec
+    return (f"{len(hist)} record(s), last: {rec['n_shards']} shards, "
+            f"{rec['scan_agg_gbps']} GB/s")
+
+
+def check_tier() -> str:
+    hist, rec = _load("tier")
+    assert set(rec["policies"]) == {"static", "cache", "memcache"}, rec
+    return f"{len(hist)} record(s), last: " + str(
+        {p: v[str(1.1)] for p, v in rec["policies"].items()})
+
+
+def check_energy() -> str:
+    hist, rec = _load("energy")
+    capped = rec["replay"]["capped"]
+    assert capped["budget_utilization"] <= 1 + 1e-9, capped
+    assert any(rec["surface"]["winners"].values()), rec["surface"]
+    return f"{len(hist)} record(s), capped replay: {capped}"
+
+
+def check_store() -> str:
+    hist, rec = _load("store")
+    assert rec["ratio"] > 1.0, rec
+    tr = rec["trace"]
+    assert tr["physical_bytes"] <= 0.5 * tr["logical_bytes"], \
+        f"compressed trace streams more than half the logical bytes: {tr}"
+    tier = rec["tier"]
+    assert tier["encoded_hit_rate"] > tier["plain_hit_rate"], \
+        f"compression did not improve the fast-tier hit rate: {tier}"
+    surf = rec["surface"]
+    assert surf["verdict_ratio1_10ms"] == "die-stacked", surf
+    assert surf["crossover_ratio_10ms"] is not None, surf
+    return (f"{len(hist)} record(s), ratio={rec['ratio']}, "
+            f"hit {tier['plain_hit_rate']}->{tier['encoded_hit_rate']}, "
+            f"crossover@10ms={surf['crossover_ratio_10ms']}")
+
+
+CHECKS = {
+    "kernels": check_kernels,
+    "queries": check_queries,
+    "tier": check_tier,
+    "energy": check_energy,
+    "store": check_store,
+}
+
+
+def main(argv=None) -> None:
+    names = (argv if argv is not None else sys.argv[1:]) or []
+    unknown = [n for n in names if n not in CHECKS]
+    if not names or unknown:
+        raise SystemExit(f"usage: check_append.py <bench>... ; benches: "
+                         f"{sorted(CHECKS)}"
+                         + (f" (unknown: {unknown})" if unknown else ""))
+    for n in names:
+        print(f"BENCH_{n}.json: {CHECKS[n]()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ MODULES = (
     "benchmarks.queries_bench",
     "benchmarks.tier_bench",
     "benchmarks.energy_bench",
+    "benchmarks.store_bench",
     "benchmarks.roofline_table",
 )
 

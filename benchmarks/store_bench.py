@@ -1,0 +1,170 @@
+"""Compressed-store benchmarks: ratio, effective bandwidth, hit-rate
+delta, and the compression axis of the decision surface.
+
+Four experiments over one compressible table (a realistic column mix:
+sorted low-cardinality -> RLE, clustered 8/16-bit -> FOR, uniform ->
+plain), all appended to BENCH_store.json at the repo root:
+
+1. *Ratio*: per-column encoding choices and the table's logical/physical
+   ratio (the selector's never-worse-than-plain guarantee in numbers).
+2. *Scan-over-compressed bandwidth*: a zipf(1.1) multi-tenant trace
+   replayed through the tiered QueryEngine over the plain and the
+   encoded table — physical (compressed) vs logical (effective) GB/s and
+   the trace's physical/logical byte fraction (the acceptance bar:
+   <= 0.5x on this mix).
+3. *Tier hit-rate delta*: the same trace, same absolute fast-tier
+   capacity — compressed chunks are smaller, so the fast tier holds
+   1/ratio more of the table and the hit rate strictly rises.
+4. *Decision surface*: the 16 TiB paper workload at compression ratios
+   (1.0, measured) plus `compression_crossover_ratio` at the 10 ms SLA —
+   at what ratio does a software-compressed traditional system beat the
+   die-stacked baseline?
+
+Set REPRO_STORE_BENCH_QUICK=1 for a smaller table/trace (CI smoke).
+"""
+from __future__ import annotations
+
+import os
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import append_trajectory
+from repro.db.columnar import BitPackedColumn, Table
+from repro.energy.tco import (cheapest_architecture,
+                              compression_crossover_ratio)
+from repro.core.systems import TiB
+from repro.store import EncodedTable
+from repro.tier import (Policy, TraceSpec, make_trace, measured_fast_gbps,
+                        paper_tiers, replay_trace)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_store.json"
+
+SKEW = 1.1
+FAST_FRACTION = 0.25
+SLA_SLACK = 2.0
+PAPER_DB = 16 * TiB
+PAPER_ACCESSED = 0.20
+
+
+def _sizes() -> tuple[int, int, int, int]:
+    """(columns, rows, chunk_rows, n_queries); quick mode for CI/tests."""
+    if os.environ.get("REPRO_STORE_BENCH_QUICK"):
+        return 8, 4096, 512, 40
+    return 16, 32768, 2048, 150
+
+
+def compressible_table(n_cols: int, n_rows: int, seed: int = 0) -> Table:
+    """The column mix compression was built for — mostly sorted
+    low-cardinality (RLE) and clustered 8/16-bit (FOR at 4 bits), with
+    one uniform full-payload column per eight that stays plain — a
+    zipfian dashboard workload's shape (timestamps cluster, statuses
+    repeat, only payload hashes resist)."""
+    rng = np.random.default_rng(seed)
+    t = Table("store")
+    for i in range(n_cols):
+        name = f"c{i:02d}"
+        kind = i % 8
+        if kind in (0, 4):       # sorted, 8 distinct values -> RLE
+            t.add(BitPackedColumn.from_values(
+                name, np.sort(rng.integers(0, 8, n_rows)), 8))
+        elif kind in (1, 5, 7):  # 16-bit clustered, span 7 -> FOR, 4 bits
+            t.add(BitPackedColumn.from_values(
+                name, 9000 + rng.integers(0, 8, n_rows), 16))
+        elif kind in (2, 6):     # 8-bit clustered, span 7 -> FOR, 4 bits
+            t.add(BitPackedColumn.from_values(
+                name, 40 + rng.integers(0, 8, n_rows), 8))
+        else:                    # uniform full-payload -> plain
+            t.add(BitPackedColumn.from_values(
+                name, rng.integers(0, 128, n_rows), 8))
+    return t
+
+
+def rows():
+    n_cols, n_rows, chunk_rows, n_queries = _sizes()
+    table = compressible_table(n_cols, n_rows, seed=0)
+    t0 = time.perf_counter()
+    encoded = EncodedTable.from_table(table, chunk_rows=chunk_rows)
+    encode_us = (time.perf_counter() - t0) * 1e6
+    ratio = encoded.ratio
+    enc_counts: dict[str, int] = {}
+    for col in encoded.columns.values():
+        for k, v in col.encodings().items():
+            enc_counts[k] = enc_counts.get(k, 0) + v
+
+    fast_gbps = measured_fast_gbps(default=8.0)
+    # fixed *absolute* fast capacity: 25% of the PLAIN table for both runs
+    tiers = paper_tiers(table.nbytes * FAST_FRACTION, fast_gbps=fast_gbps)
+    trace = make_trace(table, TraceSpec(n_queries=n_queries, skew=SKEW,
+                                        seed=7))
+    sla_s = SLA_SLACK * (table.nbytes / n_cols * 2) / tiers.fast.bandwidth
+
+    t0 = time.perf_counter()
+    pe_p, eng_p, att_p = replay_trace(table, trace, tiers, Policy.CACHE,
+                                      sla_s=sla_s, chunk_rows=chunk_rows)
+    plain_us = (time.perf_counter() - t0) / len(trace) * 1e6
+    t0 = time.perf_counter()
+    pe_e, eng_e, att_e = replay_trace(encoded, trace, tiers, Policy.CACHE,
+                                      sla_s=sla_s, chunk_rows=chunk_rows)
+    enc_us = (time.perf_counter() - t0) / len(trace) * 1e6
+    se, sp = eng_e.summary(), eng_p.summary()
+
+    surf_ratio1 = cheapest_architecture(
+        PAPER_DB, PAPER_ACCESSED * PAPER_DB, 0.010, 1e6,
+        compression_ratio=1.0)
+    surf_measured = cheapest_architecture(
+        PAPER_DB, PAPER_ACCESSED * PAPER_DB, 0.010, 1e6,
+        compression_ratio=max(ratio, 1.0))
+    crossover = compression_crossover_ratio(
+        PAPER_DB, PAPER_ACCESSED * PAPER_DB, 0.010, 1e6)
+
+    record = {
+        "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "columns": n_cols, "rows": n_rows, "chunk_rows": chunk_rows,
+        "n_queries": n_queries, "skew": SKEW,
+        "ratio": round(ratio, 4),
+        "encodings": enc_counts,
+        "physical_bytes": encoded.nbytes,
+        "logical_bytes": encoded.logical_nbytes,
+        "trace": {
+            "physical_bytes": se["bytes_scanned"],
+            "logical_bytes": se["logical_bytes"],
+            "physical_fraction": round(se["bytes_scanned"]
+                                       / se["logical_bytes"], 4),
+            "physical_gbps": round(se["measured_gbps"], 4),
+            "effective_gbps": round(se["effective_gbps"], 4),
+            "plain_gbps": round(sp["measured_gbps"], 4),
+        },
+        "tier": {
+            "fast_fraction_of_plain": FAST_FRACTION,
+            "plain_hit_rate": round(pe_p.hit_rate, 4),
+            "encoded_hit_rate": round(pe_e.hit_rate, 4),
+            "plain_attainment": att_p,
+            "encoded_attainment": att_e,
+        },
+        "surface": {
+            "verdict_ratio1_10ms": surf_ratio1["winner"],
+            "verdict_measured_10ms": surf_measured["winner"],
+            "crossover_ratio_10ms": crossover,
+        },
+    }
+    append_trajectory(BENCH_PATH, record)
+    return [
+        ("store/encode", encode_us,
+         f"ratio={ratio:.2f}x,"
+         + ",".join(f"{k}={v}" for k, v in sorted(enc_counts.items()))),
+        ("store/trace/plain", plain_us,
+         f"hit={pe_p.hit_rate:.2f},{sp['measured_gbps']:.2f}GBps,"
+         f"att={att_p:.2f}"),
+        ("store/trace/encoded", enc_us,
+         f"hit={pe_e.hit_rate:.2f},"
+         f"phys={se['measured_gbps']:.2f}GBps,"
+         f"eff={se['effective_gbps']:.2f}GBps,att={att_e:.2f}"),
+        ("store/surface/10ms", 0.0,
+         f"ratio1={surf_ratio1['winner']},"
+         f"measured={surf_measured['winner']},"
+         f"crossover={crossover and round(crossover, 2)}"),
+    ]

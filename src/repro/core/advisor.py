@@ -211,6 +211,7 @@ def advise_tier_split(db_bytes: float, bytes_per_query: float, sla_s: float,
 def advise_cost(db_bytes: float, bytes_per_query: float, sla_s: float,
                 power_budget_w: float, *, skew: float | None = None,
                 fast_gbps: float | None = None, sheet=None,
+                compression_ratio: float = 1.0,
                 measured_energy_j: float | None = None,
                 measured_latency_s: float | None = None) -> dict:
     """The paper's full three-axis question: given an SLA, a power
@@ -220,8 +221,10 @@ def advise_cost(db_bytes: float, bytes_per_query: float, sla_s: float,
     performance-provisioned for the SLA, power-infeasible ones excluded,
     plus — with `skew` — a two-tier node at the zipf hit curve's blended
     rate; `fast_gbps` prices the fast tier from the measured autotune
-    sweep). With `measured_energy_j`/`measured_latency_s` from a metered
-    run (EnergyMeter + QueryEngine), the winner's $/query is re-priced at
+    sweep; `compression_ratio` — e.g. a measured EncodedTable.ratio —
+    shrinks both footprint and traffic, the repro.store axis). With
+    `measured_energy_j`/`measured_latency_s` from a metered run
+    (EnergyMeter + QueryEngine), the winner's $/query is re-priced at
     the *measured* operating point alongside the datasheet figure, the
     same model-vs-measured loop as model_check()/provision().
     """
@@ -229,7 +232,8 @@ def advise_cost(db_bytes: float, bytes_per_query: float, sla_s: float,
 
     cell = tco.cheapest_architecture(
         db_bytes, bytes_per_query, sla_s, power_budget_w, skew=skew,
-        sheet=sheet or tco.DEFAULT_COSTS, fast_gbps=fast_gbps)
+        sheet=sheet or tco.DEFAULT_COSTS, fast_gbps=fast_gbps,
+        compression_ratio=compression_ratio)
     if measured_energy_j is not None or measured_latency_s is not None:
         if measured_energy_j is None or measured_latency_s is None:
             raise ValueError(

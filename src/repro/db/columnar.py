@@ -37,13 +37,14 @@ class BitPackedColumn:
         vmax = (1 << (code_bits - 1)) - 1
         if values.min(initial=0) < 0:
             raise ValueError(
-                f"column {name!r}: negative codes; dictionary codes are "
-                f"unsigned indices")
+                f"column {name!r}: min code {int(values.min())} is "
+                f"negative; dictionary codes are unsigned indices")
         if values.max(initial=0) > vmax:
             raise ValueError(
-                f"column {name!r}: codes exceed the {code_bits}-bit payload "
-                f"max {vmax} (the delimiter MSB must stay 0); widen "
-                f"code_bits or re-encode the dictionary")
+                f"column {name!r}: max code {int(values.max())} exceeds "
+                f"the {code_bits}-bit payload max {vmax} (the delimiter "
+                f"MSB must stay 0); widen code_bits or re-encode the "
+                f"dictionary")
         words = packref.pack(values, code_bits)
         return cls(name, code_bits, len(values), jnp.asarray(words),
                    None if dictionary is None else np.asarray(dictionary))
@@ -90,7 +91,10 @@ class Table:
 
     def add(self, col: BitPackedColumn) -> "Table":
         if self.columns and col.num_rows != self.num_rows:
-            raise ValueError("row count mismatch")
+            raise ValueError(
+                f"column {col.name!r} has {col.num_rows} rows but table "
+                f"{self.name!r} has {self.num_rows}; all columns of a "
+                f"table share one row count")
         self.columns[col.name] = col
         return self
 

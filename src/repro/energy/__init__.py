@@ -18,14 +18,15 @@ die-stacked memory" question becomes a three-axis decision:
 from repro.energy.caps import PowerCap
 from repro.energy.meter import EnergyCharge, EnergyMeter, chip_compute_watts
 from repro.energy.tco import (CostSheet, DEFAULT_COSTS, capex_usd,
-                              cheapest_architecture, decision_surface,
-                              evaluate_system, evaluate_tiered,
-                              usd_per_query)
+                              cheapest_architecture,
+                              compression_crossover_ratio,
+                              decision_surface, evaluate_system,
+                              evaluate_tiered, usd_per_query)
 
 __all__ = [
     "EnergyMeter", "EnergyCharge", "chip_compute_watts",
     "PowerCap",
     "CostSheet", "DEFAULT_COSTS", "capex_usd", "usd_per_query",
     "evaluate_system", "evaluate_tiered", "cheapest_architecture",
-    "decision_surface",
+    "decision_surface", "compression_crossover_ratio",
 ]

@@ -75,6 +75,15 @@ class CostSheet:
 
 DEFAULT_COSTS = CostSheet()
 
+#: Systems (by Table-1 name prefix) whose bandwidth already comes from
+#: stacked/on-package memory: on the compression axis of the decision
+#: surface they keep the datasheet workload — compression competes with
+#: their hardware, it does not stack onto it. Callers passing custom
+#: bandwidth-rich specs through `systems=` must list them here (via
+#: `cheapest_architecture(bandwidth_rich_prefixes=...)`), or they are
+#: treated as capacity-optimized and priced compressed.
+BANDWIDTH_RICH_PREFIXES = ("die-stacked", "tpu")
+
 
 def capex_usd(design: ClusterDesign, sheet: CostSheet = DEFAULT_COSTS
               ) -> float:
@@ -219,13 +228,30 @@ def cheapest_architecture(db_bytes: float, bytes_per_query: float,
                           systems: tuple[SystemSpec, ...] = (
                               TRADITIONAL, BIG_MEMORY, DIE_STACKED),
                           fast_gbps: float | None = None,
-                          n_hot_items: int = 64) -> dict:
+                          n_hot_items: int = 64,
+                          compression_ratio: float = 1.0,
+                          bandwidth_rich_prefixes: tuple[str, ...] =
+                          BANDWIDTH_RICH_PREFIXES) -> dict:
     """One cell of the decision surface: every candidate provisioned for
     `sla_s`, power-infeasible ones excluded, cheapest $/query named.
 
     `skew=None` skips the tiered candidate (the pure Table-1 comparison);
     with a skew the two-tier node competes at the zipf hit curve's blended
     rate.
+
+    `compression_ratio` r is the repro.store logical/physical ratio, and
+    it frames compression as the *software substitute for die-stacked
+    bandwidth*: capacity-optimized candidates (traditional, big-memory)
+    scan-over-compressed and so stream and store 1/r of the bytes, while
+    the bandwidth-rich candidates — those whose name matches a
+    `bandwidth_rich_prefixes` prefix (default: die-stacked and TPU-class
+    specs), plus the two-tier node — stay at the datasheet workload: they
+    already bought their bandwidth in hardware. Compressing every
+    candidate equally would leave the verdict scale-invariant; the
+    interesting question is exactly whether a compressed traditional
+    system now meets the SLA (and beats the $/query) that used to
+    require HBM. Custom bandwidth-rich specs passed via `systems=` must
+    be named in `bandwidth_rich_prefixes` or they are priced compressed.
     """
     if db_bytes <= 0 or bytes_per_query <= 0:
         raise ValueError(f"db_bytes={db_bytes} and bytes_per_query="
@@ -235,13 +261,26 @@ def cheapest_architecture(db_bytes: float, bytes_per_query: float,
     if not math.isfinite(power_budget_w) or power_budget_w <= 0:
         raise ValueError(f"power_budget_w={power_budget_w} must be a "
                          f"finite positive power")
+    if not math.isfinite(compression_ratio) or compression_ratio < 1.0:
+        raise ValueError(
+            f"compression_ratio={compression_ratio} must be a finite "
+            f"ratio >= 1.0 (logical/physical; the store's selector never "
+            f"produces expansion)")
     wl = Workload(db_size=db_bytes,
                   percent_accessed=min(bytes_per_query / db_bytes, 1.0))
-    cands = [evaluate_system(s, wl, sla_s, sheet) for s in systems]
+    wl_c = Workload(db_size=db_bytes / compression_ratio,
+                    percent_accessed=wl.percent_accessed)
+    cands = []
+    for s in systems:
+        compressed = not s.name.startswith(tuple(bandwidth_rich_prefixes))
+        c = evaluate_system(s, wl_c if compressed else wl, sla_s, sheet)
+        c["compressed"] = compressed and compression_ratio > 1.0
+        cands.append(c)
     if skew is not None:
         t = evaluate_tiered(db_bytes, bytes_per_query, sla_s, skew, sheet,
                             fast_gbps=fast_gbps, n_hot_items=n_hot_items)
         if t is not None:
+            t["compressed"] = False
             cands.append(t)
     for c in cands:
         c["within_power"] = c["power_w"] <= power_budget_w * (1 + 1e-9)
@@ -252,6 +291,7 @@ def cheapest_architecture(db_bytes: float, bytes_per_query: float,
         "sla_s": sla_s,
         "skew": skew,
         "power_budget_w": power_budget_w,
+        "compression_ratio": compression_ratio,
         "winner": winner and winner["name"],
         "usd_per_query": winner and winner["usd_per_query"],
         "candidates": cands,
@@ -264,19 +304,26 @@ def decision_surface(db_bytes: float, bytes_per_query: float, *,
                      power_budgets_w: tuple = (50e3, 250e3, 1e6),
                      sheet: CostSheet = DEFAULT_COSTS,
                      fast_gbps: float | None = None,
-                     n_hot_items: int = 64) -> dict:
+                     n_hot_items: int = 64,
+                     compression_ratios: tuple = (1.0,)) -> dict:
     """The paper's "when to use" question as a queryable grid: for every
-    (SLA, skew, power budget) cell, the cheapest feasible architecture.
+    (SLA, skew, power budget, compression ratio) cell, the cheapest
+    feasible architecture.
 
     Cells where nothing is feasible report winner=None — the honest
     answer the closed-form figures cannot give. The default budgets are
-    the paper's Fig. 4 operating points (50 kW / 250 kW / 1 MW).
+    the paper's Fig. 4 operating points (50 kW / 250 kW / 1 MW); the
+    default ratio axis is the uncompressed store (one cell per old cell,
+    so the surface is backward-compatible). Passing the measured
+    repro.store ratio alongside 1.0 shows which cells compression flips.
     """
     cells = [
         cheapest_architecture(db_bytes, bytes_per_query, sla, budget,
                               skew=skew, sheet=sheet, fast_gbps=fast_gbps,
-                              n_hot_items=n_hot_items)
+                              n_hot_items=n_hot_items,
+                              compression_ratio=ratio)
         for sla in slas for skew in skews for budget in power_budgets_w
+        for ratio in compression_ratios
     ]
     return {
         "db_bytes": db_bytes,
@@ -284,6 +331,48 @@ def decision_surface(db_bytes: float, bytes_per_query: float, *,
         "slas": list(slas),
         "skews": list(skews),
         "power_budgets_w": list(power_budgets_w),
+        "compression_ratios": list(compression_ratios),
         "fast_gbps": fast_gbps,
         "cells": cells,
     }
+
+
+def compression_crossover_ratio(db_bytes: float, bytes_per_query: float,
+                                sla_s: float, power_budget_w: float, *,
+                                skew: float | None = None,
+                                sheet: CostSheet = DEFAULT_COSTS,
+                                fast_gbps: float | None = None,
+                                n_hot_items: int = 64,
+                                max_ratio: float = 64.0,
+                                tol: float = 0.01) -> float | None:
+    """The headline number compression adds to the paper's verdict: the
+    smallest logical/physical ratio at which the *traditional*
+    (capacity-optimized, bandwidth-poor) system becomes the cheapest
+    feasible architecture for this (SLA, power) cell — i.e. how much the
+    store must compress before die-stacking stops paying.
+
+    Returns 1.0 when traditional already wins uncompressed, None when it
+    still does not win at `max_ratio`. Bisects to `tol` assuming the win
+    region is upward-closed in the ratio (shrinking bytes only ever helps
+    the bandwidth-poor candidate)."""
+
+    def traditional_wins(ratio: float) -> bool:
+        cell = cheapest_architecture(
+            db_bytes, bytes_per_query, sla_s, power_budget_w, skew=skew,
+            sheet=sheet, fast_gbps=fast_gbps, n_hot_items=n_hot_items,
+            compression_ratio=ratio)
+        return (cell["winner"] is not None
+                and cell["winner"].startswith("traditional"))
+
+    if traditional_wins(1.0):
+        return 1.0
+    if not traditional_wins(max_ratio):
+        return None
+    lo, hi = 1.0, max_ratio
+    while hi - lo > tol:
+        mid = (lo + hi) / 2
+        if traditional_wins(mid):
+            hi = mid
+        else:
+            lo = mid
+    return hi

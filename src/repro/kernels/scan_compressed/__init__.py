@@ -1,0 +1,1 @@
+"""Fused predicate scan + aggregate directly on compressed (RLE) runs."""

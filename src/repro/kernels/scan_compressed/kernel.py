@@ -1,0 +1,98 @@
+"""Scan-over-compressed Pallas TPU kernel: fused predicate + aggregate
+directly on RLE runs.
+
+The bandwidth argument, squared: the plain fused kernel already avoids the
+mask round-trip; this one avoids touching *rows* at all. Per grid step a
+(block_rows, 128) tile of run values is compared against the constant on
+the VPU (runs hold decoded codes, so all six predicates are plain int32
+compares — no BitWeaving masks needed) and reduced against the matching
+run-length tile: a run of length n contributes n to the count and n*value
+to the sum, entirely in registers/VMEM. A chunk of r rows in k runs
+streams 8k bytes instead of 4*ceil(r/cpw) — on sorted or low-cardinality
+columns that is a 10-100x traffic cut at identical answers.
+
+Exactness: the store bounds chunks at 65536 rows with payloads < 2^15, so
+every partial (value*length summed over a chunk) stays below 2^31 and the
+int32 accumulator is exact; the sum leaves as the normalized 16-bit
+planes all aggregate paths share. Zero-length runs (pow2 padding) are
+cancelled by the `lengths > 0` term of the selection.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.scan_filter.kernel import DEFAULT_BLOCK_ROWS, LANES
+
+
+def _rle_kernel(v_ref, l_ref, o_ref, acc, *, op: str, constant: int,
+                vmax: int):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _():
+        acc[0, 0] = jnp.int32(0)      # raw sum (chunk-bounded, exact)
+        acc[0, 1] = jnp.int32(0)      # unused until the final normalize
+        acc[0, 2] = jnp.int32(0)      # count
+        acc[0, 3] = jnp.int32(vmax)   # min
+        acc[0, 4] = jnp.int32(0)      # max
+
+    v = v_ref[...]
+    l = l_ref[...]
+    c = jnp.int32(constant)
+    cmp = {"lt": v < c, "le": v <= c, "gt": v > c, "ge": v >= c,
+           "eq": v == c, "ne": v != c}[op]
+    sel = cmp & (l > 0)
+
+    acc[0, 0] += jnp.sum(jnp.where(sel, v * l, 0))
+    acc[0, 2] += jnp.sum(jnp.where(sel, l, 0))
+    acc[0, 3] = jnp.minimum(acc[0, 3], jnp.min(jnp.where(sel, v, vmax)))
+    acc[0, 4] = jnp.maximum(acc[0, 4], jnp.max(jnp.where(sel, v, 0)))
+
+    @pl.when(i == n - 1)
+    def _():
+        s = acc[0, 0]
+        o_ref[0, 0] = s & 0xFFFF              # normalized sum planes
+        o_ref[0, 1] = s >> 16
+        o_ref[0, 2] = acc[0, 2]
+        o_ref[0, 3] = acc[0, 3]
+        o_ref[0, 4] = acc[0, 4]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("constant", "op", "code_bits",
+                                    "block_rows", "interpret"))
+def rle_scan_aggregate_packed(values2d, lengths2d, *, constant: int,
+                              op: str, code_bits: int,
+                              block_rows: int = DEFAULT_BLOCK_ROWS,
+                              interpret: bool = True):
+    """(rows, 128) int32 run-value/run-length planes -> int32[1, 5]
+    = [sum_lo, sum_hi, count, min, max] over the rows the runs encode.
+
+    Rows are zero-padded to the block multiple; padded (and pow2-pad)
+    runs carry length 0 and contribute to no accumulator."""
+    rows = values2d.shape[0]
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        values2d = jnp.pad(values2d, ((0, pad), (0, 0)))
+        lengths2d = jnp.pad(lengths2d, ((0, pad), (0, 0)))
+        rows += pad
+    vmax = (1 << (code_bits - 1)) - 1
+    kernel = functools.partial(_rle_kernel, op=op, constant=int(constant),
+                               vmax=vmax)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, 5), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 5), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, 5), jnp.int32)],
+        interpret=interpret,
+    )(values2d, lengths2d)

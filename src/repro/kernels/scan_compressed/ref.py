@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the scan-over-compressed (RLE) fused aggregate.
+
+Semantics: the run arrays are an exact RLE of a code column — a run of
+length n with value v stands for n identical rows — and the op computes
+the same (sum planes, count, min, max) the plain-format fused kernel
+returns over the decoded rows: a matching run contributes n to the count
+and n*v to the sum; zero-length runs are layout padding and inert.
+
+Exactness: per-chunk totals fit int32 because the store bounds chunks at
+MAX_CHUNK_ROWS (65536) rows and payloads at 2^15-1, so vmax * rows <
+2^31; the sum leaves as the same normalized 16-bit (lo, hi) planes every
+aggregate path carries (psum-safe, reassembled by
+repro.kernels.aggregate.ops.finalize).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.aggregate.ref import identity
+from repro.kernels.scan_filter.ref import OPS
+
+_CMP = {"lt": jnp.less, "le": jnp.less_equal, "gt": jnp.greater,
+        "ge": jnp.greater_equal, "eq": jnp.equal, "ne": jnp.not_equal}
+
+
+def rle_scan_aggregate_ref(values, lengths, constant: int, op: str,
+                           code_bits: int):
+    """SELECT agg(col) WHERE col <op> constant over one RLE-encoded
+    column chunk -> dict(sum_lo, sum_hi, count, min, max)."""
+    if op not in OPS:
+        raise ValueError(f"unknown predicate op {op!r}; expected one of "
+                         f"{OPS}")
+    v = jnp.asarray(values, jnp.int32)
+    l = jnp.asarray(lengths, jnp.int32)
+    if v.size == 0:
+        return identity(code_bits)
+    vmax = jnp.int32((1 << (code_bits - 1)) - 1)
+    sel = _CMP[op](v, jnp.int32(constant)) & (l > 0)
+    s = jnp.sum(jnp.where(sel, v * l, 0))      # < 2^31 per chunk: exact
+    return {
+        "sum_lo": s & 0xFFFF,
+        "sum_hi": s >> 16,
+        "count": jnp.sum(jnp.where(sel, l, 0)),
+        "min": jnp.min(jnp.where(sel, v, vmax)),
+        "max": jnp.max(jnp.where(sel, v, 0)),
+    }

@@ -36,7 +36,9 @@ def scan_filter(words, constant: int, op: str, code_bits: int,
       lt = ~ge(C);  le = lt(C+1) | all-if-C==max;  gt = ge(C+1, 0-if-max);
       ne = ~eq.
     """
-    assert op in OPS, op
+    if op not in OPS:
+        raise ValueError(f"unknown predicate op {op!r}; expected one of "
+                         f"{OPS}")
     r = dispatch.resolve(mode, use_kernel=use_kernel)
     if not r.use_pallas:
         return ref.scan_ref(words, constant, op, code_bits)

@@ -79,7 +79,9 @@ def unpack_mask(mask_words, code_bits: int):
 
 def scan_ref(words, constant: int, op: str, code_bits: int):
     """Oracle: unpack -> compare -> repack delimiter-bit mask."""
-    assert op in OPS
+    if op not in OPS:
+        raise ValueError(f"unknown predicate op {op!r}; expected one of "
+                         f"{OPS}")
     vals = unpack(words, code_bits)
     fn = {"lt": jnp.less, "le": jnp.less_equal, "gt": jnp.greater,
           "ge": jnp.greater_equal, "eq": jnp.equal,

@@ -30,7 +30,6 @@ from dataclasses import dataclass
 from repro.kernels.dispatch import KernelMode
 from repro.query import physical
 from repro.query.plan import Query
-from repro.query.sharded import ShardedTable
 from repro.serve.sla import DeadlineQueue, SLAReport, summarize
 
 
@@ -38,10 +37,11 @@ from repro.serve.sla import DeadlineQueue, SLAReport, summarize
 class _Pending:
     qid: int
     query: Query
-    bytes_scanned: int
+    bytes_scanned: int              # physical (compressed) bytes
     submitted_at: float
     chunks: dict | None = None      # tiered mode: per-chunk byte counts
     tenant: int = 0                 # energy-ledger attribution
+    logical_bytes: int = 0          # plain-format bytes the query covers
 
 
 @dataclass
@@ -56,6 +56,7 @@ class QueryResult:
     deadline: float
     met: bool
     tier: dict | None = None        # tiered mode: byte split + modeled s
+    logical_bytes: int = 0          # == bytes_scanned unless compressed
 
 
 class QueryEngine:
@@ -104,13 +105,16 @@ class QueryEngine:
         self.results: list[QueryResult] = []
         self._qid = 0
         self._est_gbps = float(est_gbps)
-        self.bytes_total = 0.0
+        self.bytes_total = 0.0          # physical (compressed) bytes
+        self.logical_bytes_total = 0.0  # plain-format coverage
         self.seconds_total = 0.0
 
     # --- structure --------------------------------------------------------
     @property
     def sharded(self) -> bool:
-        return isinstance(self.table, ShardedTable)
+        # ShardedTable or the compressed store's delta view — anything
+        # that executes per-shard and reports a shard count
+        return hasattr(self.table, "n_shards")
 
     @property
     def n_shards(self) -> int:
@@ -121,8 +125,16 @@ class QueryEngine:
         return self.table.num_rows
 
     def bytes_scanned(self, query: Query) -> int:
+        """Physical bytes the query streams (compressed for a
+        repro.store table — what actually crosses the memory bus)."""
         return physical.referenced_bytes(query.plan(), query.aggregates,
                                          self.table.columns)
+
+    def logical_bytes(self, query: Query) -> int:
+        """Plain-format bytes the query covers; the physical/logical gap
+        is the effective-bandwidth multiplier compression buys."""
+        return physical.referenced_logical_bytes(
+            query.plan(), query.aggregates, self.table.columns)
 
     def chunk_accesses(self, query: Query) -> dict:
         """Per-(column, chunk) bytes this query streams, in the tiered
@@ -189,7 +201,8 @@ class QueryEngine:
         nbytes = (sum(chunks.values()) if chunks is not None
                   else self.bytes_scanned(query))
         pend = _Pending(self._qid, query, nbytes, self.clock(),
-                        chunks=chunks, tenant=tenant)
+                        chunks=chunks, tenant=tenant,
+                        logical_bytes=self.logical_bytes(query))
         return pend.qid if self.queue.push(pend, deadline) else None
 
     # --- execution --------------------------------------------------------
@@ -198,6 +211,10 @@ class QueryEngine:
         if self.sharded:
             return self.table.execute(query.plan(), query.aggregates,
                                       mode=self.mode)
+        if hasattr(self.table, "chunk_rows"):        # repro.store table
+            from repro.store.exec import execute_encoded
+            return execute_encoded(query.plan(), query.aggregates,
+                                   self.table, mode=self.mode)
         return physical.finalize_aggs(physical.execute(
             query.plan(), query.aggregates,
             physical.table_slices(self.table), mode=self.mode))
@@ -246,6 +263,7 @@ class QueryEngine:
                 t1 = self.clock()
                 self.seconds_total += max(t1 - t0, 1e-12)
             self.bytes_total += pend.bytes_scanned
+            self.logical_bytes_total += pend.logical_bytes
             count = next(iter(aggs.values()))["count"]
             res = QueryResult(
                 qid=pend.qid, query=pend.query, aggregates=aggs,
@@ -253,7 +271,8 @@ class QueryEngine:
                 selectivity=count / max(self.num_rows, 1),
                 bytes_scanned=pend.bytes_scanned,
                 latency_s=t1 - pend.submitted_at,
-                deadline=deadline, met=t1 <= deadline, tier=tier_info)
+                deadline=deadline, met=t1 <= deadline, tier=tier_info,
+                logical_bytes=pend.logical_bytes)
             self.reports.append(SLAReport(
                 rid=pend.qid, deadline=deadline,
                 submitted_at=pend.submitted_at, finished_at=t1,
@@ -268,6 +287,12 @@ class QueryEngine:
         out["bytes_scanned"] = self.bytes_total
         out["measured_gbps"] = (self.bytes_total / self.seconds_total / 1e9
                                 if self.seconds_total > 0 else 0.0)
+        out["logical_bytes"] = self.logical_bytes_total
+        # logical coverage per second: > measured_gbps exactly when the
+        # store is compressed — the bandwidth compression multiplied
+        out["effective_gbps"] = (self.logical_bytes_total
+                                 / self.seconds_total / 1e9
+                                 if self.seconds_total > 0 else 0.0)
         if self.tiered is not None:
             out["tier"] = self.tiered.stats(self.n_shards)
             out["energy"] = self.tiered.meter.summary()

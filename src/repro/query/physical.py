@@ -148,9 +148,18 @@ def finalize_aggs(out: dict) -> dict:
 
 
 def referenced_bytes(plan: Plan, aggregates, columns: dict) -> int:
-    """Bytes a query streams from memory — every referenced column's packed
-    footprint (the model's `percent accessed` numerator)."""
+    """Bytes a query streams from memory — every referenced column's
+    *physical* footprint (compressed for repro.store columns; the model's
+    `percent accessed` numerator either way)."""
     return sum(columns[c].nbytes
+               for c in columns_of(plan) | set(aggregates))
+
+
+def referenced_logical_bytes(plan: Plan, aggregates, columns: dict) -> int:
+    """Bytes the query covers in the plain format — equal to
+    referenced_bytes on uncompressed tables; on a compressed store the
+    physical/logical ratio is the bandwidth multiplier compression buys."""
+    return sum(getattr(columns[c], "logical_nbytes", columns[c].nbytes)
                for c in columns_of(plan) | set(aggregates))
 
 
@@ -186,8 +195,14 @@ def chunk_universe(source: dict, chunk_rows: int,
     out: dict[tuple[str, int], int] = {}
     for name in (sorted(names) if names is not None else source):
         col = source[name]
-        for i, b in enumerate(column_chunk_bytes(
-                int(col.words.size), col.code_bits, chunk_rows)):
+        if hasattr(col, "chunk_physical_bytes"):
+            # repro.store encoded columns carry their own per-chunk
+            # (compressed) byte counts; chunk ids stay row-range-aligned
+            per_chunk = col.chunk_physical_bytes(chunk_rows)
+        else:
+            per_chunk = column_chunk_bytes(int(col.words.size),
+                                           col.code_bits, chunk_rows)
+        for i, b in enumerate(per_chunk):
             out[(name, i)] = b
     return out
 

@@ -1,0 +1,31 @@
+"""Compressed columnar store: scan-over-compressed as a bandwidth
+multiplier.
+
+- `encode`: chunk-granular RLE / frame-of-reference / plain encodings
+  over the bit-packed code planes, with an EncodingStats-driven selector
+  that never loses to the plain format.
+- `exec`: query execution over compressed chunks — RLE runs through the
+  `scan_compressed` kernel family, FOR planes through the existing
+  BitWeaving kernels at the delta width (translated predicates, exact
+  base fix-up).
+- `sharded`: the global-frame delta view that rides the unmodified
+  ShardedTable machinery across a mesh.
+
+QueryEngine(EncodedTable...) executes compressed directly; `bytes_scanned`
+becomes physical (compressed) traffic with `logical_bytes` preserved
+beside it, so tiering, energy metering, and the decision surface all see
+the bandwidth compression buys.
+"""
+from repro.store.encode import (DEFAULT_CHUNK_ROWS, MAX_CHUNK_ROWS,
+                                EncodedChunk, EncodedColumn, EncodedTable,
+                                Encoding, EncodingStats, choose_encoding,
+                                encode_chunk, width_for_span)
+from repro.store.exec import execute_encoded, translate_plan, translate_pred
+from repro.store.sharded import ShardedEncodedTable
+
+__all__ = [
+    "Encoding", "EncodingStats", "EncodedChunk", "EncodedColumn",
+    "EncodedTable", "ShardedEncodedTable", "choose_encoding",
+    "encode_chunk", "execute_encoded", "translate_plan", "translate_pred",
+    "width_for_span", "DEFAULT_CHUNK_ROWS", "MAX_CHUNK_ROWS",
+]

@@ -1,0 +1,177 @@
+"""Query execution over an EncodedTable: scan the compressed bytes.
+
+Chunk-by-chunk routing (each chunk carries its own encoding and, for FOR,
+its own frame of reference):
+
+- the dominant single-predicate/single-aggregate query over an RLE chunk
+  of that same column takes the fused `scan_compressed` kernel — runs
+  stream, rows never materialize;
+- FOR and PLAIN chunks execute through the *existing* physical operators
+  at their payload width: a FOR plane is a plain BitWeaving plane in
+  delta space, so predicates are translated into that space
+  (`translate_plan`) and the same scan/aggregate/fused kernels run on the
+  compressed words — the fused same-width path engages automatically when
+  predicate and aggregate chunks share a delta width. Aggregates come
+  back in the delta domain and get an exact host-int base fix-up
+  (sum += base*count, min/max += base);
+- RLE chunks inside general plan shapes (AND/OR trees, cross-column
+  aggregates) are decoded to rows in-graph (gather + repack) — the one
+  documented case that materializes codes, off the dominant path.
+
+Every path lands on the same empty-selection identity (count=0, sum=0,
+min=vmax, max=0 at the *logical* width), so results are bit-identical to
+the plain-format engine regardless of encoding mix.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.kernels.aggregate import ops as agg_ops
+from repro.kernels.scan_compressed import ops as rle_ops
+from repro.kernels.scan_filter.ref import codes_per_word
+from repro.query import physical
+from repro.query.physical import ColumnSlice
+from repro.query.plan import And, Or, Plan, Pred, columns_of
+from repro.store.encode import Encoding, EncodedTable
+
+
+def identity_ints(code_bits: int) -> dict:
+    """The empty-selection aggregate as exact host ints — the one answer
+    every path (PALLAS / XLA_REF / sharded / encoded) must agree on."""
+    return {"sum": 0, "count": 0, "min": (1 << (code_bits - 1)) - 1,
+            "max": 0}
+
+
+def fixup_base(agg: dict, base: int, code_bits: int) -> dict:
+    """Translate a finalized delta-domain aggregate back to code space.
+
+    Exact in Python ints (base*count exceeds int32 long before the planes
+    would); an empty selection collapses to the canonical logical-width
+    identity — the delta-domain min sentinel must not leak."""
+    if agg["count"] == 0:
+        return identity_ints(code_bits)
+    if base == 0:
+        return dict(agg)
+    return {"sum": agg["sum"] + base * agg["count"],
+            "count": agg["count"],
+            "min": agg["min"] + base,
+            "max": agg["max"] + base}
+
+
+def translate_pred(op: str, constant: int, base: int,
+                   width: int) -> tuple[str, int]:
+    """Rewrite `col <op> constant` into the delta domain of a FOR chunk
+    (codes = base + delta, deltas in [0, 2^(width-1)-1]).
+
+    Out-of-range constants clamp to tautologies the kernels already
+    short-circuit: `ge 0` matches every valid row, `gt dvmax` matches
+    none — so the result is always a plain Pred and the unmodified
+    physical operators execute it."""
+    dvmax = (1 << (width - 1)) - 1
+    c = constant - base
+    all_, none = ("ge", 0), ("gt", dvmax)
+    if op == "ge":
+        o = all_ if c <= 0 else none if c > dvmax else (op, c)
+    elif op == "gt":
+        o = all_ if c < 0 else none if c >= dvmax else (op, c)
+    elif op == "lt":
+        o = none if c <= 0 else all_ if c > dvmax else (op, c)
+    elif op == "le":
+        o = none if c < 0 else all_ if c >= dvmax else (op, c)
+    elif op == "eq":
+        o = (op, c) if 0 <= c <= dvmax else none
+    elif op == "ne":
+        o = (op, c) if 0 <= c <= dvmax else all_
+    else:
+        raise ValueError(f"unknown predicate op {op!r}")
+    return o
+
+
+def translate_plan(plan: Plan, frames: dict[str, tuple[int, int]]) -> Plan:
+    """Rewrite every leaf of a plan into its column's delta domain.
+    `frames` maps column -> (base, payload width); base 0 at the logical
+    width leaves a leaf unchanged."""
+    if isinstance(plan, Pred):
+        base, width = frames[plan.column]
+        op, c = translate_pred(plan.op, plan.constant, base, width)
+        return Pred(plan.column, op, c)
+    if isinstance(plan, And):
+        return And.of(*(translate_plan(p, frames) for p in plan.children))
+    if isinstance(plan, Or):
+        return Or.of(*(translate_plan(p, frames) for p in plan.children))
+    raise ValueError(f"unknown plan node {type(plan).__name__!r}")
+
+
+def jnp_pack_codes(vals, code_bits: int):
+    """In-graph inverse of scan_filter.ref.unpack: row codes -> packed
+    words (rows padded to a word multiple with zeros)."""
+    c = codes_per_word(code_bits)
+    vals = jnp.asarray(vals, jnp.uint32)
+    vals = jnp.pad(vals, (0, (-vals.shape[0]) % c)).reshape(-1, c)
+    shifts = jnp.arange(c, dtype=jnp.uint32) * code_bits
+    return jnp.bitwise_or.reduce(vals << shifts[None, :], axis=1)
+
+
+def rle_rows(chunk):
+    """In-graph decode of an RLE chunk to its row codes (the fallback for
+    plan shapes the run kernel does not cover)."""
+    ends = jnp.cumsum(jnp.asarray(chunk.lengths, jnp.int32))
+    idx = jnp.searchsorted(ends, jnp.arange(chunk.n_rows), side="right")
+    return jnp.asarray(chunk.values, jnp.uint32)[idx]
+
+
+@dataclass(frozen=True)
+class _Bound:
+    """One chunk of one column, bound for execution: a ColumnSlice plus
+    the frame that maps its payload back to logical codes."""
+    slice: ColumnSlice
+    base: int
+
+
+def _bind_chunk(col, ci: int) -> _Bound:
+    ch = col.chunks[ci]
+    if ch.encoding is Encoding.RLE:
+        words = jnp_pack_codes(rle_rows(ch), ch.code_bits)
+        return _Bound(ColumnSlice(words, ch.valid, ch.code_bits), 0)
+    return _Bound(ColumnSlice(ch.words, ch.valid, ch.width), ch.base)
+
+
+def _accumulate(total: dict, part: dict) -> None:
+    total["sum"] += part["sum"]
+    total["count"] += part["count"]
+    total["min"] = min(total["min"], part["min"])
+    total["max"] = max(total["max"], part["max"])
+
+
+def execute_encoded(plan: Plan, aggregates, table: EncodedTable,
+                    mode=None) -> dict:
+    """Run a bound plan over the compressed chunks -> exact host-int
+    aggregates, bit-identical to the plain-format engine."""
+    aggregates = tuple(aggregates)
+    names = sorted(columns_of(plan) | set(aggregates))
+    out = {a: identity_ints(table.columns[a].code_bits)
+           for a in aggregates}
+    fused_rle = (isinstance(plan, Pred) and aggregates == (plan.column,))
+    for ci in range(table.n_chunks):
+        chunks = {n: table.columns[n].chunks[ci] for n in names}
+        if fused_rle and chunks[plan.column].encoding is Encoding.RLE:
+            ch = chunks[plan.column]
+            d = rle_ops.rle_scan_aggregate(ch.values, ch.lengths,
+                                           plan.constant, plan.op,
+                                           ch.code_bits, mode=mode)
+            _accumulate(out[plan.column], agg_ops.finalize(d))
+            continue
+        bound = {n: _bind_chunk(table.columns[n], ci) for n in names}
+        frames = {n: (b.base, b.slice.code_bits)
+                  for n, b in bound.items()}
+        tplan = translate_plan(plan, frames)
+        raw = physical.execute(tplan, aggregates,
+                               {n: b.slice for n, b in bound.items()},
+                               mode=mode)
+        for a in aggregates:
+            part = fixup_base(agg_ops.finalize(raw[a]), bound[a].base,
+                              table.columns[a].code_bits)
+            _accumulate(out[a], part)
+    return out

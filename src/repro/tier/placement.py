@@ -117,9 +117,13 @@ class PlacementEngine:
         """
         from repro.query import physical
 
-        chunk_rows = physical.align_chunk_rows(table.columns, chunk_rows)
         source = (table.slices if hasattr(table, "slices")
                   else table.columns)
+        # align on the *source* widths: a sharded (or compressed delta)
+        # view may store columns at narrower payload widths than the
+        # logical table, and chunk boundaries must be word boundaries in
+        # the layout actually placed
+        chunk_rows = physical.align_chunk_rows(source, chunk_rows)
         universe = physical.chunk_universe(source, chunk_rows)
         ids = list(universe)
         nbytes = list(universe.values())

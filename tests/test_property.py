@@ -110,6 +110,77 @@ def test_pack_unpack_roundtrip(codes, bits):
 
 
 # --------------------------------------------------------------------------
+# compressed store invariants (repro.store)
+# --------------------------------------------------------------------------
+from repro.store import (Encoding, EncodingStats, choose_encoding,
+                         encode_chunk)
+
+_bits_and_codes = st.sampled_from([4, 8, 16]).flatmap(
+    lambda bits: st.tuples(
+        st.just(bits),
+        st.lists(st.integers(0, (1 << (bits - 1)) - 1),
+                 min_size=0, max_size=1500)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(bc=_bits_and_codes, enc=st.sampled_from([None, *Encoding]))
+def test_encode_decode_roundtrip_every_encoding(bc, enc):
+    """Exact round-trip for the selector's choice AND for each encoding
+    forced — compression must never change a single code."""
+    bits, codes = bc
+    codes = np.asarray(codes, np.uint32)
+    chunk = encode_chunk(codes, bits, enc)
+    np.testing.assert_array_equal(chunk.decode(), codes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(bc=_bits_and_codes)
+def test_roundtrip_sorted_runs(bc):
+    """Sorted low-cardinality chunks (RLE's home turf) round-trip under
+    whatever the selector picks."""
+    bits, codes = bc
+    codes = np.sort(np.asarray(codes, np.uint32) % 7)
+    chunk = encode_chunk(codes, bits)
+    np.testing.assert_array_equal(chunk.decode(), codes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([4, 8, 16]), n=st.integers(1, 2000),
+       v=st.integers(0, 7))
+def test_roundtrip_adversarial_single_run(bits, n, v):
+    """One giant run — the degenerate best case for RLE."""
+    codes = np.full(n, v, np.uint32)
+    chunk = encode_chunk(codes, bits)
+    assert chunk.encoding is Encoding.RLE
+    np.testing.assert_array_equal(chunk.decode(), codes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([8, 16]), n=st.integers(2, 127))
+def test_roundtrip_all_distinct(bits, n):
+    """Every value distinct — the adversarial worst case for RLE; the
+    selector must fall back to FOR or PLAIN, never expand."""
+    codes = np.arange(n, dtype=np.uint32)
+    chunk = encode_chunk(codes, bits)
+    assert chunk.nbytes <= chunk.stats.plain_nbytes
+    np.testing.assert_array_equal(chunk.decode(), codes)
+
+
+@settings(max_examples=60, deadline=None)
+@given(bc=_bits_and_codes)
+def test_choose_encoding_never_larger_than_plain(bc):
+    """The selector's guarantee: the chosen physical footprint never
+    exceeds today's plain packed format."""
+    bits, codes = bc
+    codes = np.asarray(codes, np.uint32)
+    stats = EncodingStats.from_codes(codes, bits)
+    chosen = choose_encoding(stats)
+    assert stats.nbytes(chosen) <= stats.plain_nbytes
+    chunk = encode_chunk(codes, bits)
+    assert chunk.nbytes <= stats.plain_nbytes
+
+
+# --------------------------------------------------------------------------
 # MoE dispatch invariants
 # --------------------------------------------------------------------------
 @settings(max_examples=15, deadline=None)
