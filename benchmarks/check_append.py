@@ -78,12 +78,39 @@ def check_store() -> str:
             f"crossover@10ms={surf['crossover_ratio_10ms']}")
 
 
+def check_resilience() -> str:
+    hist, rec = _load("resilience")
+    sweep = rec["sweep"]
+    recovered = [k for k in next(iter(sweep.values())) if k != "norecover"]
+    assert recovered, rec
+    for rate, per in sweep.items():
+        base = per["norecover"]["attainment"]
+        if float(rate) == 0.0:
+            # a fault-free chaos run is the plain tiered path: recovery
+            # machinery idle, attainment identical
+            assert all(per[p]["attainment"] == base for p in recovered), per
+            continue
+        for p in recovered:
+            assert per[p]["attainment"] > base, \
+                (f"recovery policy {p!r} did not beat the no-recovery "
+                 f"baseline at fault rate {rate}: {per}")
+            assert per[p]["degraded"] == 0, per
+            assert per[p]["mttr_ms"] is not None, per
+            assert per[p]["recovery_bytes"] > 0, per
+    worst = max((r for r in sweep if float(r) > 0), key=float)
+    per = sweep[worst]
+    return (f"{len(hist)} record(s), rate={worst}: "
+            + ", ".join(f"{p}={per[p]['attainment']}"
+                        for p in ["norecover"] + recovered))
+
+
 CHECKS = {
     "kernels": check_kernels,
     "queries": check_queries,
     "tier": check_tier,
     "energy": check_energy,
     "store": check_store,
+    "resilience": check_resilience,
 }
 
 

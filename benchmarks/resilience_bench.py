@@ -1,0 +1,159 @@
+"""Resilience benchmarks: SLA attainment and modeled MTTR under faults.
+
+The paper's verdict hinges on a strict response-time SLA, but the other
+benchmarks measure a fault-free machine. This one replays the same seeded
+zipf trace through the tiered QueryEngine with a ChaosHarness injecting
+tier-read stalls and bit-flipped chunk payloads, and sweeps the fault
+rate three ways per rate:
+
+- *norecover*: faults on, recovery off — stalls ride to completion at
+  stall_factor x, corrupt chunks fail the query typed-degraded (counted
+  as a miss), and admission prices the full expected stall slowdown;
+- *patient* / *aggressive*: recovery on under two RetryPolicy variants
+  (long vs short timeout relative to one clean chunk read) — stalled
+  reads are abandoned and re-issued, corruption is repaired from the
+  oracle, and every recovery byte lands on the kind="recovery" ledger.
+
+Attainment is the fault-adjusted number (typed-degraded answers and
+admission rejections count as misses); MTTR is the harness's modeled
+extra-seconds-per-recovered-fault. The acceptance bar checked by
+check_append.py: recovery-enabled attainment strictly above the
+no-recovery baseline at every non-zero fault rate, and bit-equal at
+rate zero (a fault-free chaos run is the plain tiered path).
+
+Each run rebuilds the encoded table from the same seed, so injected
+corruption never leaks between configurations and the whole sweep is
+reproducible from the spec seeds. Appends one record per run to
+BENCH_resilience.json. Set REPRO_RESILIENCE_BENCH_QUICK=1 for a smaller
+table/trace (CI smoke).
+"""
+from __future__ import annotations
+
+import os
+import time
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import append_trajectory
+from benchmarks.store_bench import compressible_table
+from repro.query import physical
+from repro.resilience import ChaosHarness, ChunkGuard, FaultSpec, RetryPolicy
+from repro.store import EncodedTable
+from repro.tier import (Policy, TraceSpec, make_trace, measured_fast_gbps,
+                        paper_tiers, replay_trace)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_resilience.json"
+
+STALL_RATES = (0.0, 0.05, 0.15)
+CORRUPT_RATE = 0.05          # of chunks, whenever stalls are injected
+FAST_FRACTION = 0.25
+SLA_SLACK = 2.0
+PLACEMENT = Policy.CACHE
+FAULT_SEED = 11
+
+
+def _sizes() -> tuple[int, int, int, int]:
+    """(columns, rows, chunk_rows, n_queries); quick mode for CI/tests."""
+    if os.environ.get("REPRO_RESILIENCE_BENCH_QUICK"):
+        return 8, 4096, 512, 30
+    return 12, 16384, 1024, 100
+
+
+def _retry_policies(clean_chunk_s: float) -> dict[str, RetryPolicy | None]:
+    """Retry knobs scaled to one clean fast-tier chunk read, so the same
+    policy names mean the same thing at any table size."""
+    return {
+        "norecover": None,
+        "patient": RetryPolicy(timeout_s=2.5 * clean_chunk_s,
+                               backoff_s=0.5 * clean_chunk_s,
+                               backoff_cap_s=2.0 * clean_chunk_s,
+                               max_retries=3),
+        "aggressive": RetryPolicy(timeout_s=1.5 * clean_chunk_s,
+                                  backoff_s=0.25 * clean_chunk_s,
+                                  backoff_cap_s=clean_chunk_s,
+                                  max_retries=2),
+    }
+
+
+def _run(spec, retry, recover, trace, tiers, chunk_rows, sla_s,
+         n_cols, n_rows):
+    # fresh table per run: corruption must not leak across configurations
+    encoded = EncodedTable.from_table(compressible_table(n_cols, n_rows,
+                                                         seed=0),
+                                      chunk_rows=chunk_rows)
+    guard = ChunkGuard(encoded)
+    chaos = ChaosHarness(spec, retry=retry, guard=guard, recover=recover)
+    if spec.corrupt_rate > 0:
+        chaos.inject_corruption()
+    t0 = time.perf_counter()
+    pe, eng, att = replay_trace(encoded, trace, tiers, PLACEMENT,
+                                sla_s=sla_s, chunk_rows=chunk_rows,
+                                chaos=chaos)
+    wall_us = (time.perf_counter() - t0) / len(trace) * 1e6
+    s = chaos.summary()
+    es = eng.summary()
+    return {
+        "attainment": round(att, 4),
+        "mttr_ms": (round(s["mttr_s"] * 1e3, 6)
+                    if s["mttr_s"] is not None else None),
+        "stalls": s["stalls"],
+        "retries": s["retries"],
+        "failovers": s["failovers"],
+        "repairs": s["repairs"],
+        "degraded": s["degraded_queries"],
+        "rejected": es["rejected"],
+        "recovery_j": round(pe.meter.recovery_j, 6),
+        "recovery_bytes": pe.recovery_bytes_total,
+    }, wall_us
+
+
+def rows():
+    n_cols, n_rows, chunk_rows, n_queries = _sizes()
+    table = compressible_table(n_cols, n_rows, seed=0)
+    encoded = EncodedTable.from_table(table, chunk_rows=chunk_rows)
+    fast_gbps = measured_fast_gbps(default=8.0)
+    tiers = paper_tiers(table.nbytes * FAST_FRACTION, fast_gbps=fast_gbps)
+    trace = make_trace(table, TraceSpec(n_queries=n_queries, skew=1.1,
+                                        seed=7))
+    bytes_typ = sum(
+        physical.referenced_bytes(tq.query.plan(), tq.query.aggregates,
+                                  encoded.columns)
+        for tq in trace) / len(trace)
+    sla_s = SLA_SLACK * bytes_typ / tiers.fast.bandwidth
+    n_chunks = sum(len(c.chunks) for c in encoded.columns.values())
+    clean_chunk_s = (encoded.nbytes / n_chunks) / tiers.fast.bandwidth
+    policies = _retry_policies(clean_chunk_s)
+
+    out = []
+    record: dict = {"sweep": {}}
+    for rate in STALL_RATES:
+        spec = FaultSpec(seed=FAULT_SEED, stall_rate=rate,
+                         corrupt_rate=CORRUPT_RATE if rate else 0.0)
+        per_rate: dict = {}
+        for name, retry in policies.items():
+            r, wall_us = _run(spec, retry, recover=retry is not None,
+                              trace=trace, tiers=tiers,
+                              chunk_rows=chunk_rows, sla_s=sla_s,
+                              n_cols=n_cols, n_rows=n_rows)
+            per_rate[name] = r
+            out.append((f"resilience/{name}/rate={rate:g}", wall_us,
+                        f"att={r['attainment']:.2f},"
+                        f"stalls={r['stalls']},deg={r['degraded']},"
+                        f"mttr={r['mttr_ms']}ms"))
+        record["sweep"][f"{rate:g}"] = per_rate
+
+    record.update({
+        "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "columns": n_cols, "rows": n_rows, "chunk_rows": chunk_rows,
+        "n_queries": n_queries, "fast_fraction": FAST_FRACTION,
+        "placement_policy": PLACEMENT.value,
+        "fault_seed": FAULT_SEED, "corrupt_rate": CORRUPT_RATE,
+        "stall_rates": list(STALL_RATES),
+        "sla_ms": round(sla_s * 1e3, 6),
+        "clean_chunk_us": round(clean_chunk_s * 1e6, 4),
+        "fast_gbps": round(tiers.fast.gbps, 4),
+    })
+    append_trajectory(BENCH_PATH, record)
+    return out

@@ -26,6 +26,7 @@ MODULES = (
     "benchmarks.tier_bench",
     "benchmarks.energy_bench",
     "benchmarks.store_bench",
+    "benchmarks.resilience_bench",
     "benchmarks.roofline_table",
 )
 

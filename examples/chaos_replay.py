@@ -1,0 +1,91 @@
+"""Chaos replay walkthrough: the same seeded fault trace, twice, to the bit.
+
+A chaos run here is a pure function of (workload, FaultSpec, RetryPolicy):
+every stall, bit-flip, and retry decision is drawn order-independently
+from the spec's seed and all time is modeled on serve.sla.VirtualClock —
+no wall-clock sleeps, no racy nondeterminism. That is what makes fault
+drills debuggable: a failure seen once can be replayed exactly, and a fix
+can be verified against the *same* fault trace rather than a new roll of
+the dice.
+
+The walkthrough corrupts chunk payloads and stalls fast-tier reads over a
+skewed trace, replays the whole thing twice from the same seed, and
+asserts the two runs agree bit-for-bit: same attainment, same retry /
+repair / failover counts, same recovery joules, same answers. A third run
+with recovery disabled shows what the machinery buys — typed-degraded
+queries and ridden-out stalls drop attainment, but never a silent wrong
+answer.
+
+Run: PYTHONPATH=src python examples/chaos_replay.py
+"""
+from repro.db import Table
+from repro.query import physical
+from repro.resilience import ChaosHarness, ChunkGuard, FaultSpec, RetryPolicy
+from repro.store import EncodedTable
+from repro.tier import (Policy, TraceSpec, make_trace, paper_tiers,
+                        replay_trace)
+
+N_COLS, N_ROWS, CHUNK_ROWS = 8, 8192, 512
+SPEC = FaultSpec(seed=42, stall_rate=0.1, corrupt_rate=0.05)
+SLA_SLACK = 2.5
+
+
+def chaos_run(recover: bool):
+    """One full fault-injected replay; rebuilt from scratch so injected
+    corruption never leaks between runs — determinism comes from seeds,
+    not shared state."""
+    table = Table.synthetic(
+        "events", N_ROWS, {f"c{i:02d}": 8 for i in range(N_COLS)}, seed=0)
+    encoded = EncodedTable.from_table(table, chunk_rows=CHUNK_ROWS)
+    tiers = paper_tiers(table.nbytes * 0.25, fast_gbps=0.016)
+    trace = make_trace(table, TraceSpec(n_queries=120, skew=1.2, seed=11))
+    clean_s = (encoded.nbytes
+               / sum(len(c.chunks) for c in encoded.columns.values())
+               / tiers.fast.bandwidth)
+    chaos = ChaosHarness(SPEC, guard=ChunkGuard(encoded), recover=recover,
+                         retry=RetryPolicy(timeout_s=2.0 * clean_s,
+                                           backoff_s=0.5 * clean_s,
+                                           max_retries=2))
+    chaos.inject_corruption()
+    bytes_typ = sum(
+        physical.referenced_bytes(tq.query.plan(), tq.query.aggregates,
+                                  encoded.columns)
+        for tq in trace) / len(trace)
+    sla_s = SLA_SLACK * bytes_typ / tiers.fast.bandwidth
+    pe, eng, att = replay_trace(encoded, trace, tiers, Policy.CACHE,
+                                sla_s=sla_s, chunk_rows=CHUNK_ROWS,
+                                chaos=chaos)
+    answers = [(r.qid, r.degraded, tuple(sorted(
+        (k, tuple(sorted(v.items()))) for k, v in r.aggregates.items())))
+        for r in eng.results]
+    return {"attainment": att, "summary": chaos.summary(),
+            "recovery_j": pe.meter.recovery_j, "answers": answers}
+
+
+def main():
+    first = chaos_run(recover=True)
+    second = chaos_run(recover=True)
+    assert first == second, "seeded chaos replay diverged between runs"
+    s = first["summary"]
+    print(f"fault spec: {s['spec']}")
+    print(f"replay x2 -> identical verdicts: attainment="
+          f"{first['attainment']:.2f}, stalls={s['stalls']}, "
+          f"retries={s['retries']}, failovers={s['failovers']}, "
+          f"repairs={s['repairs']}, "
+          f"recovery={first['recovery_j'] * 1e6:.2f}uJ, "
+          f"mttr={s['mttr_s'] * 1e3:.3f}ms")
+
+    degraded = chaos_run(recover=False)
+    d = degraded["summary"]
+    print(f"recovery off  -> attainment={degraded['attainment']:.2f}, "
+          f"degraded_queries={d['degraded_queries']} "
+          f"(typed errors, never silent partial sums)")
+    assert first["attainment"] > degraded["attainment"], \
+        "recovery should buy attainment under the same faults"
+    assert d["degraded_queries"] > 0 and s["degraded_queries"] == 0
+    print("\nsame seed, same faults, same verdict — chaos drills here are "
+          "replayable evidence, not flaky noise")
+
+
+if __name__ == "__main__":
+    main()

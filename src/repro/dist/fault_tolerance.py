@@ -9,30 +9,53 @@ to a restart budget (tests assert bitwise-identical resumption).
 """
 from __future__ import annotations
 
+import contextlib
 import json
+import math
+import os
 import statistics
+import tempfile
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
 
 
 class Heartbeat:
-    """Per-host liveness + progress beacon over a shared directory."""
+    """Per-host liveness + progress beacon over a shared directory.
 
-    def __init__(self, directory, host: str, timeout_s: float = 30.0):
+    `clock` defaults to wall time; chaos tests and the resilience
+    harness inject a VirtualClock so liveness verdicts are deterministic
+    (dead_hosts at modeled time, no sleeps, no flakes).
+    """
+
+    def __init__(self, directory, host: str, timeout_s: float = 30.0,
+                 clock=time.time):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.host = host
         self.timeout_s = timeout_s
+        self.clock = clock
 
     def _path(self, host: str) -> Path:
         return self.dir / f"{host}.heartbeat"
 
     def beat(self, step: int) -> None:
-        tmp = self._path(self.host).with_suffix(".tmp")
-        tmp.write_text(json.dumps({"host": self.host, "step": int(step),
-                                   "time": time.time()}))
-        tmp.replace(self._path(self.host))
+        # mkstemp + os.replace (the tune-cache idiom): with_suffix would
+        # mangle dotted host names ("node.0.heartbeat" -> "node.0.tmp",
+        # clobbering a sibling host's temp file) and an in-place write
+        # could be read torn; a rename is atomic on POSIX
+        final = self._path(self.host)
+        fd, tmp = tempfile.mkstemp(dir=self.dir, prefix=final.name + ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(json.dumps({"host": self.host, "step": int(step),
+                                    "time": self.clock()}))
+            os.replace(tmp, final)
+        except BaseException:
+            with contextlib.suppress(OSError):
+                os.unlink(tmp)
+            raise
 
     def _read_all(self) -> dict:
         out = {}
@@ -48,7 +71,7 @@ class Heartbeat:
         return sorted(self._read_all())
 
     def dead_hosts(self) -> list:
-        now = time.time()
+        now = self.clock()
         return sorted(h for h, rec in self._read_all().items()
                       if now - rec["time"] > self.timeout_s)
 
@@ -92,17 +115,34 @@ class StragglerDetector:
 @dataclass
 class RestartPolicy:
     max_restarts: int = 2
-    backoff_s: float = 0.0
+    backoff_s: float = 0.0       # linear backoff: restart k waits k * this
     restarts: int = 0
     failures: list = field(default_factory=list)
 
+    def __post_init__(self):
+        if self.max_restarts < 0:
+            raise ValueError(f"max_restarts={self.max_restarts} must be "
+                             f">= 0")
+        if not math.isfinite(self.backoff_s) or self.backoff_s < 0:
+            raise ValueError(f"backoff_s={self.backoff_s} must be finite "
+                             f"and non-negative")
 
-def run_supervised(loop, restore, policy: RestartPolicy):
+    def backoff(self, restart: int) -> float:
+        """Seconds to wait before restart number `restart` (1-based)."""
+        if restart < 1:
+            raise ValueError(f"restart={restart} must be >= 1")
+        return self.backoff_s * restart
+
+
+def run_supervised(loop, restore, policy: RestartPolicy, clock=None):
     """Run `loop(state)` under crash-restart supervision.
 
     `restore()` produces the state to (re)start from — typically the latest
-    checkpoint. Re-raises once the restart budget is exhausted. Returns
-    (final_state, policy).
+    checkpoint. Each restart waits `policy.backoff(k)` first: on the wall
+    clock by default, or on an injected advanceable clock (e.g.
+    serve.sla.VirtualClock) so supervised chaos tests model the backoff
+    instead of sleeping it. Re-raises once the restart budget is
+    exhausted. Returns (final_state, policy).
     """
     state = restore()
     while True:
@@ -113,6 +153,10 @@ def run_supervised(loop, restore, policy: RestartPolicy):
             policy.restarts += 1
             if policy.restarts > policy.max_restarts:
                 raise
-            if policy.backoff_s:
-                time.sleep(policy.backoff_s * policy.restarts)
+            delay = policy.backoff(policy.restarts)
+            if delay:
+                if clock is not None and hasattr(clock, "advance"):
+                    clock.advance(delay)
+                else:
+                    time.sleep(delay)
             state = restore()

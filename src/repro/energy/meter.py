@@ -56,6 +56,7 @@ class EnergyCharge:
     capacity_j: float
     compute_j: float = 0.0
     busy_s: float = 0.0          # modeled busy time the compute term used
+    kind: str = "query"          # "query" | "recovery" (retry/repair bytes)
 
     @property
     def memory_j(self) -> float:
@@ -72,7 +73,7 @@ class EnergyCharge:
             "capacity_bytes": self.capacity_bytes,
             "fast_j": self.fast_j, "capacity_j": self.capacity_j,
             "compute_j": self.compute_j, "total_j": self.total_j,
-            "busy_s": self.busy_s,
+            "busy_s": self.busy_s, "kind": self.kind,
         }
 
 
@@ -97,18 +98,20 @@ class EnergyMeter:
 
     # --- charging ---------------------------------------------------------
     def charge(self, fast_bytes: int, capacity_bytes: int, *,
-               qid: int | None = None,
-               tenant: int | None = None) -> EnergyCharge:
+               qid: int | None = None, tenant: int | None = None,
+               kind: str = "query") -> EnergyCharge:
         """Open a query's charge with its memory term (bytes validated,
         per-tier pricing single-sourced in TierPair.energy_components);
         the compute term lands via charge_compute once the modeled
-        service time is known."""
+        service time is known. `kind` separates nominal query lines from
+        "recovery" lines (retry/failover/repair traffic) so fault
+        overhead is auditable on the bill."""
         fast_j, capacity_j = self.tiers.energy_components(fast_bytes,
                                                           capacity_bytes)
         ch = EnergyCharge(
             qid=qid, tenant=tenant,
             fast_bytes=int(fast_bytes), capacity_bytes=int(capacity_bytes),
-            fast_j=fast_j, capacity_j=capacity_j)
+            fast_j=fast_j, capacity_j=capacity_j, kind=str(kind))
         self.charges.append(ch)
         return ch
 
@@ -153,17 +156,25 @@ class EnergyMeter:
             t = out.setdefault(c.tenant, {
                 "queries": 0, "fast_j": 0.0, "capacity_j": 0.0,
                 "compute_j": 0.0, "total_j": 0.0})
-            t["queries"] += 1
+            # recovery lines bill joules to the tenant without counting
+            # as queries — j_per_query stays joules per *served* query
+            t["queries"] += 1 if c.kind == "query" else 0
             t["fast_j"] += c.fast_j
             t["capacity_j"] += c.capacity_j
             t["compute_j"] += c.compute_j
             t["total_j"] += c.total_j
         return out
 
+    @property
+    def recovery_j(self) -> float:
+        """Joules on kind="recovery" lines — what the faults cost."""
+        return sum(c.total_j for c in self.charges if c.kind == "recovery")
+
     def summary(self) -> dict:
-        n = len(self.charges)
+        n = sum(1 for c in self.charges if c.kind == "query")
         return {
             "queries": n,
+            "recovery_j": self.recovery_j,
             "fast_j": self.fast_j,
             "capacity_j": self.capacity_j,
             "compute_j": self.compute_j,

@@ -57,6 +57,8 @@ class QueryResult:
     met: bool
     tier: dict | None = None        # tiered mode: byte split + modeled s
     logical_bytes: int = 0          # == bytes_scanned unless compressed
+    degraded: bool = False          # chaos: no exact answer was produced
+    error: str | None = None        # the typed degradation, when degraded
 
 
 class QueryEngine:
@@ -79,11 +81,24 @@ class QueryEngine:
 
     def __init__(self, table, *, mode=KernelMode.AUTO,
                  clock=time.perf_counter, est_gbps: float = 1.0,
-                 tiered=None, power_cap=None):
+                 tiered=None, power_cap=None, chaos=None):
         self.table = table
         self.mode = KernelMode(mode)
         self.tiered = tiered
         self.power_cap = power_cap
+        self.chaos = chaos
+        if chaos is not None:
+            if tiered is None:
+                # faults are modeled service/byte penalties on the tier
+                # ledger; without tiering there is nothing to charge them to
+                raise ValueError(
+                    "chaos needs the tiered service model; pass "
+                    "tiered=repro.tier.PlacementEngine(...) as well")
+            if chaos.guard is not None and chaos.guard.table is not table:
+                raise ValueError(
+                    "chaos.guard was built over a different table than "
+                    "this engine executes; its oracle cannot repair these "
+                    "chunks")
         if tiered is not None and not hasattr(clock, "advance"):
             # modeled service needs a modeled time axis: pricing admission
             # at tier rates while deadlines tick on the wall clock would
@@ -170,6 +185,11 @@ class QueryEngine:
 
     def _est_service_s(self, p: _Pending) -> float:
         est = p.bytes_scanned / max(self.measured_bps, 1e-9)
+        if self.chaos is not None:
+            # price expected recovery overhead at admission: a query the
+            # fault rate would push past its deadline is rejected here
+            est = self.chaos.inflate_estimate(
+                est, len(p.chunks) if p.chunks else 1)
         if self.power_cap is not None:
             # feasibility must be priced at the power-derated rate: a
             # query the governor would stretch past its deadline is
@@ -213,8 +233,9 @@ class QueryEngine:
                                       mode=self.mode)
         if hasattr(self.table, "chunk_rows"):        # repro.store table
             from repro.store.exec import execute_encoded
+            guard = self.chaos.guard if self.chaos is not None else None
             return execute_encoded(query.plan(), query.aggregates,
-                                   self.table, mode=self.mode)
+                                   self.table, mode=self.mode, guard=guard)
         return physical.finalize_aggs(physical.execute(
             query.plan(), query.aggregates,
             physical.table_slices(self.table), mode=self.mode))
@@ -228,25 +249,33 @@ class QueryEngine:
                 break
             pend, deadline = got
             t0 = self.clock()
-            aggs = self._execute(pend.query)
+            error = None
             tier_info = None
             if self.tiered is not None:
                 # charge the modeled tiered service time instead of wall
                 # time: each chunk at the rate of the tier it lived in
-                acc = self.tiered.on_access(pend.chunks, qid=pend.qid,
-                                            tenant=pend.tenant)
-                busy = self.tiered.service_s(acc, self.n_shards)
-                self.tiered.meter.charge_compute(acc.charge, busy,
-                                                 self.n_shards)
+                if self.chaos is not None:
+                    # the harness owns the fault-injected path: breaker
+                    # gating, verify-on-read, degraded failover, and the
+                    # stall/retry extras folded into busy/joules
+                    aggs, acc, busy, query_j, error = \
+                        self.chaos.run_query(self, pend, t0)
+                else:
+                    aggs = self._execute(pend.query)
+                    acc = self.tiered.on_access(pend.chunks, qid=pend.qid,
+                                                tenant=pend.tenant)
+                    busy = self.tiered.service_s(acc, self.n_shards)
+                    self.tiered.meter.charge_compute(acc.charge, busy,
+                                                     self.n_shards)
+                    query_j = acc.charge.total_j
                 service = busy
                 if self.power_cap is not None:
                     # race-to-idle throttling: the governor stretches wall
                     # time until no watt window exceeds budget; joules are
                     # fixed at the busy-time charge, the chip idles the rest
                     service = self.power_cap.throttled_service_s(
-                        t0, acc.charge.total_j, busy)
-                    self.power_cap.record(t0, t0 + service,
-                                          acc.charge.total_j,
+                        t0, query_j, busy)
+                    self.power_cap.record(t0, t0 + service, query_j,
                                           natural_s=busy)
                 t1 = self.clock.advance(service)
                 self.seconds_total += service
@@ -254,29 +283,33 @@ class QueryEngine:
                              "capacity_bytes": acc.capacity_bytes,
                              "hit_fraction": acc.hit_fraction,
                              "service_s": service,
-                             "energy_j": acc.charge.total_j}
+                             "energy_j": query_j}
                 if self.power_cap is not None:
                     tier_info["throttle_s"] = service - busy
             else:
+                aggs = self._execute(pend.query)
                 # finalize inside _execute forces the device sync, so
                 # t1 - t0 covers the full scan
                 t1 = self.clock()
                 self.seconds_total += max(t1 - t0, 1e-12)
             self.bytes_total += pend.bytes_scanned
             self.logical_bytes_total += pend.logical_bytes
-            count = next(iter(aggs.values()))["count"]
+            count = (next(iter(aggs.values()))["count"] if aggs else 0)
             res = QueryResult(
-                qid=pend.qid, query=pend.query, aggregates=aggs,
+                qid=pend.qid, query=pend.query,
+                aggregates=aggs if aggs is not None else {},
                 count=count,
                 selectivity=count / max(self.num_rows, 1),
                 bytes_scanned=pend.bytes_scanned,
                 latency_s=t1 - pend.submitted_at,
-                deadline=deadline, met=t1 <= deadline, tier=tier_info,
-                logical_bytes=pend.logical_bytes)
+                deadline=deadline,
+                met=t1 <= deadline and error is None, tier=tier_info,
+                logical_bytes=pend.logical_bytes,
+                degraded=error is not None, error=error)
             self.reports.append(SLAReport(
                 rid=pend.qid, deadline=deadline,
                 submitted_at=pend.submitted_at, finished_at=t1,
-                work=pend.bytes_scanned))
+                work=pend.bytes_scanned, degraded=error is not None))
             self.results.append(res)
             batch.append(res)
         return batch
@@ -298,6 +331,8 @@ class QueryEngine:
             out["energy"] = self.tiered.meter.summary()
         if self.power_cap is not None:
             out["power"] = self.power_cap.report(now=self.clock())
+        if self.chaos is not None:
+            out["resilience"] = self.chaos.summary()
         return out
 
     def model_check(self, system=None) -> dict:

@@ -116,6 +116,79 @@ class ShardedTable:
             args += [self.slices[n].words, self.slices[n].valid]
         return physical.finalize_aggs(fn(*args))
 
+    def execute_partials(self, plan, aggregates, mode=None) -> list[dict]:
+        """Per-shard finalized aggregates in shard order (exact host ints).
+
+        The degraded-mode combine surface: resilience.recover merges the
+        surviving shards' partials with lost shards re-executed from the
+        host copy, instead of the all-shards psum. Merging all partials
+        equals `execute` bit for bit — the psum'd planes are themselves
+        per-shard sums, and finalize is linear in the planes.
+        """
+        aggregates = tuple(aggregates)
+        key = (plan, aggregates, None if mode is None else str(mode),
+               "partials")
+        fn = self._jitted.get(key)
+        if fn is None:
+            fn = self._jitted[key] = self._build_partials(plan, aggregates,
+                                                          mode)
+        args = []
+        for n in self._referenced(plan, aggregates):
+            args += [self.slices[n].words, self.slices[n].valid]
+        stacked = fn(*args)     # {col: {field: (n_shards,) device arrays}}
+        return [physical.finalize_aggs(
+                    {col: {k: v[i] for k, v in d.items()}
+                     for col, d in stacked.items()})
+                for i in range(self.n_shards)]
+
+    def _build_partials(self, plan, aggregates: tuple, mode):
+        names = self._referenced(plan, aggregates)
+        bits = {n: self.slices[n].code_bits for n in names}
+        axis = self.axis
+
+        def per_shard(*flat):
+            slices = {n: ColumnSlice(flat[2 * i], flat[2 * i + 1], bits[n])
+                      for i, n in enumerate(names)}
+            out = physical.execute(plan, aggregates, slices, mode=mode)
+            # no psum: each shard contributes its (1,) slice of the
+            # stacked per-shard output instead of a combined scalar
+            return jax.tree.map(lambda x: jnp.reshape(x, (1,)), out)
+
+        return jax.jit(shard_map(per_shard, mesh=self.mesh,
+                                 in_specs=(P(axis),) * (2 * len(names)),
+                                 out_specs=P(axis), check_rep=False))
+
+    # --- degraded-mode recovery source ------------------------------------
+    def shard_row_range(self, shard: int) -> tuple[int, int]:
+        """Logical (unpadded) row range [lo, hi) shard `shard` owns; empty
+        when the shard holds only alignment padding."""
+        if shard < 0 or shard >= self.n_shards:
+            raise ValueError(f"shard={shard} outside [0, {self.n_shards})")
+        lo = shard * self.rows_per_shard
+        return lo, max(lo, min(lo + self.rows_per_shard, self.num_rows))
+
+    def host_shard_slices(self, shard: int, names=None
+                          ) -> dict[str, ColumnSlice]:
+        """One shard's row range bound from the logical (host) table — the
+        capacity-tier replica degraded execution re-reads when that
+        shard's device copy is lost. rows_per_shard is word-aligned for
+        every column, so the word slice is exact; a fresh validity mask
+        cancels rows past num_rows."""
+        lo, hi = self.shard_row_range(shard)
+        out = {}
+        for name in (sorted(names) if names is not None else
+                     self.table.columns):
+            col = self.table.columns[name]
+            cpw = 32 // col.code_bits
+            w0 = lo // cpw
+            w1 = min(w0 + self.rows_per_shard // cpw, int(col.words.size))
+            words = np.asarray(col.words)[w0:w1]
+            valid = packref.pack_mask(
+                np.arange(words.size * cpw) < (hi - lo), col.code_bits)
+            out[name] = ColumnSlice(jnp.asarray(words), jnp.asarray(valid),
+                                    col.code_bits)
+        return out
+
     def _build(self, plan, aggregates: tuple, mode):
         names = self._referenced(plan, aggregates)
         bits = {n: self.slices[n].code_bits for n in names}

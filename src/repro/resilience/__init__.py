@@ -1,0 +1,29 @@
+"""repro.resilience: deterministic chaos + the recovery it exercises.
+
+The paper's 10 ms SLA verdict is only as good as its worst fault: this
+package injects seeded, replayable faults on the modeled clock
+(faults.FaultInjector), and supplies the recovery machinery — checksum
+verify-on-read with re-encode-from-oracle repair (recover.ChunkGuard),
+SLA-aware retry/backoff with failover (retry.RetryPolicy), degraded-mode
+shard re-execution (recover.execute_degraded), and a circuit breaker
+demoting a faulting fast tier (recover.CircuitBreaker) — wired into the
+query path by harness.ChaosHarness via QueryEngine(chaos=...).
+"""
+from repro.resilience.faults import FaultInjector, FaultSpec
+from repro.resilience.harness import ChaosHarness
+from repro.resilience.recover import (ChunkCorruptionError, ChunkGuard,
+                                      CircuitBreaker, DegradedResultError,
+                                      execute_degraded)
+from repro.resilience.retry import RetryPolicy
+
+__all__ = [
+    "ChaosHarness",
+    "ChunkCorruptionError",
+    "ChunkGuard",
+    "CircuitBreaker",
+    "DegradedResultError",
+    "FaultInjector",
+    "FaultSpec",
+    "RetryPolicy",
+    "execute_degraded",
+]

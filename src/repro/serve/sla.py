@@ -48,6 +48,9 @@ class SLAReport:
     submitted_at: float
     finished_at: float
     work: float = 0.0            # tokens generated / bytes scanned
+    degraded: bool = False       # typed-degraded answer (resilience):
+    #                              served, but the SLA's promise — a full,
+    #                              exact answer in time — was not kept
 
     @property
     def latency_s(self) -> float:
@@ -55,7 +58,7 @@ class SLAReport:
 
     @property
     def met(self) -> bool:
-        return self.finished_at <= self.deadline
+        return self.finished_at <= self.deadline and not self.degraded
 
 
 class DeadlineQueue:
@@ -163,6 +166,7 @@ def summarize(reports: list[SLAReport], rejected: int = 0) -> dict:
     return {
         "served": len(reports),
         "rejected": rejected,
+        "degraded": sum(1 for r in reports if r.degraded),
         "sla_attainment": met / len(reports) if reports else 1.0,
         "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
         "latency_p99_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,

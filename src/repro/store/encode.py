@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import enum
 import math
+import zlib
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
@@ -147,6 +148,7 @@ class EncodedChunk:
     lengths: jnp.ndarray | None = None  # (n_runs_padded,) int32 (RLE)
     n_runs: int = 0
     valid: jnp.ndarray | None = field(default=None, repr=False)
+    checksum: int = 0                   # crc32 over payload + layout meta
 
     @property
     def nbytes(self) -> int:
@@ -160,6 +162,30 @@ class EncodedChunk:
     @property
     def logical_nbytes(self) -> int:
         return plain_nbytes(self.n_rows, self.code_bits)
+
+    # --- integrity --------------------------------------------------------
+    def payload_checksum(self) -> int:
+        """crc32 over the payload planes plus the layout metadata that
+        interprets them — a flipped bit anywhere a scan would read
+        changes this, so corruption is *detected* on read, never
+        silently aggregated (repro.resilience.ChunkGuard)."""
+        crc = zlib.crc32(
+            f"{self.encoding.value}|{self.n_rows}|{self.code_bits}|"
+            f"{self.width}|{self.base}|{self.n_runs}".encode())
+        for plane in (self.words, self.values, self.lengths):
+            if plane is not None:
+                crc = zlib.crc32(np.asarray(plane).tobytes(), crc)
+        return crc
+
+    def seal(self) -> "EncodedChunk":
+        """Stamp the checksum of the current payload (encode time, or
+        after an authorized repair re-encode)."""
+        self.checksum = self.payload_checksum()
+        return self
+
+    def verify(self) -> bool:
+        """Does the stored payload still match its sealed checksum?"""
+        return self.payload_checksum() == self.checksum
 
     def decode(self) -> np.ndarray:
         """Exact logical codes back out of the physical layout."""
@@ -210,7 +236,7 @@ def encode_chunk(codes, code_bits: int,
             values=jnp.asarray(values), lengths=jnp.asarray(lengths),
             valid=jnp.asarray(packref.pack_mask(
                 np.arange(plain_nbytes(n, code_bits) // 4
-                          * (32 // code_bits)) < n, code_bits)))
+                          * (32 // code_bits)) < n, code_bits))).seal()
     if enc is Encoding.FOR:
         base, width = stats.vmin, stats.delta_bits
         payload = codes - np.uint32(base)
@@ -221,7 +247,8 @@ def encode_chunk(codes, code_bits: int,
     valid = packref.pack_mask(
         np.arange(len(words) * (32 // width)) < n, width)
     return EncodedChunk(enc, n, code_bits, stats, width=width, base=base,
-                        words=jnp.asarray(words), valid=jnp.asarray(valid))
+                        words=jnp.asarray(words),
+                        valid=jnp.asarray(valid)).seal()
 
 
 @dataclass

@@ -146,15 +146,23 @@ def _accumulate(total: dict, part: dict) -> None:
 
 
 def execute_encoded(plan: Plan, aggregates, table: EncodedTable,
-                    mode=None) -> dict:
+                    mode=None, guard=None) -> dict:
     """Run a bound plan over the compressed chunks -> exact host-int
-    aggregates, bit-identical to the plain-format engine."""
+    aggregates, bit-identical to the plain-format engine.
+
+    `guard` (a resilience.ChunkGuard) makes every chunk read verify its
+    checksum first: a corrupt chunk is quarantined and repaired from the
+    oracle before its bytes reach a kernel, or the query dies with a
+    typed ChunkCorruptionError — corrupt payloads never aggregate.
+    """
     aggregates = tuple(aggregates)
     names = sorted(columns_of(plan) | set(aggregates))
     out = {a: identity_ints(table.columns[a].code_bits)
            for a in aggregates}
     fused_rle = (isinstance(plan, Pred) and aggregates == (plan.column,))
     for ci in range(table.n_chunks):
+        if guard is not None:
+            guard.check([(n, ci) for n in names])
         chunks = {n: table.columns[n].chunks[ci] for n in names}
         if fused_rle and chunks[plan.column].encoding is Encoding.RLE:
             ch = chunks[plan.column]

@@ -94,8 +94,15 @@ class PlacementEngine:
         self.meter = meter if meter is not None else EnergyMeter(tiers)
         self.fast_bytes_total = 0
         self.capacity_bytes_total = 0
+        self.recovery_bytes_total = 0
         self.hits_total = 0
         self.misses_total = 0
+        # circuit-breaker demotion (repro.resilience): while True, every
+        # access is *charged* at the capacity tier — the fast copy is not
+        # trusted for service — but placement state (residency, LRU
+        # clocks, frequency counters, ghost bits) keeps evolving, so the
+        # fast tier rejoins warm when the breaker closes
+        self.demoted = False
         if self.policy is Policy.STATIC:
             for i in (pin_order if pin_order is not None else range(n)):
                 if self.budget.fits(int(self.nbytes[i])):
@@ -158,6 +165,17 @@ class PlacementEngine:
         exact sum of the ledger's per-tier memory lines."""
         return self.meter.memory_j
 
+    def resident(self, cid: tuple[str, int]) -> bool:
+        """Is this chunk's authoritative copy in the fast tier right now?
+        (True residency, independent of circuit-breaker demotion.)"""
+        i = self.index.get(cid)
+        if i is None:
+            raise ValueError(
+                f"unknown chunk {cid!r}; placement was built with "
+                f"chunk_rows={self.chunk_rows} over "
+                f"{sorted({c for c, _ in self.ids})}")
+        return bool(self.in_fast[i])
+
     def blended_measured_bps(self, chips: int = 1) -> float:
         """The admission-control rate: harmonic blend of the tier rates at
         the *measured* hit fraction (before any access: at the resident
@@ -188,6 +206,8 @@ class PlacementEngine:
             "capacity_bytes": int(self.capacity_bytes_total),
             "chunk_hits": self.hits_total,
             "chunk_misses": self.misses_total,
+            "recovery_bytes": int(self.recovery_bytes_total),
+            "demoted": self.demoted,
             "energy_j": self.energy_j_total,
             "blended_gbps": self.blended_measured_bps(chips) / 1e9,
         }
@@ -205,7 +225,7 @@ class PlacementEngine:
                     f"unknown chunk {cid!r}; placement was built with "
                     f"chunk_rows={self.chunk_rows} over "
                     f"{sorted({c for c, _ in self.ids})}")
-            if self.in_fast[i]:
+            if self.in_fast[i] and not self.demoted:
                 acc.fast_bytes += b
                 acc.n_hit += 1
             else:
@@ -234,18 +254,24 @@ class PlacementEngine:
                     f"chunk_rows={self.chunk_rows} over "
                     f"{sorted({c for c, _ in self.ids})}")
             self._clock += 1
-            hit = bool(self.in_fast[i])
+            # charging vs residency split: under circuit-breaker demotion
+            # a fast-resident chunk is *charged* at the capacity tier, but
+            # policy bookkeeping still sees true residency — ghost bits
+            # and frequency counters must not drift while the tier heals
+            resident = bool(self.in_fast[i])
+            hit = resident and not self.demoted
+            if resident:
+                self.last_access[i] = self._clock
             if hit:
                 acc.fast_bytes += b
                 acc.n_hit += 1
-                self.last_access[i] = self._clock
             else:
                 acc.capacity_bytes += b
                 acc.n_miss += 1
             if self.policy is Policy.CACHE:
-                self._cache_touch(i, hit)
+                self._cache_touch(i, resident)
             elif self.policy is Policy.MEMCACHE:
-                self._memcache_touch(i, hit)
+                self._memcache_touch(i, resident)
         self.fast_bytes_total += acc.fast_bytes
         self.capacity_bytes_total += acc.capacity_bytes
         self.hits_total += acc.n_hit
@@ -253,6 +279,24 @@ class PlacementEngine:
         acc.charge = self.meter.charge(acc.fast_bytes, acc.capacity_bytes,
                                        qid=qid, tenant=tenant)
         return acc
+
+    def charge_recovery(self, fast_bytes: int, capacity_bytes: int, *,
+                        qid: int | None = None, tenant: int | None = None):
+        """Charge retry / failover / repair traffic: the extra bytes the
+        recovery machinery streamed beyond the nominal access. They join
+        the cumulative ledger (so the blended admission rate reflects
+        fault overhead) and open a kind="recovery" line on the energy
+        meter — charged exactly once, the no-double-charge invariant the
+        property tests pin down. Returns the meter line."""
+        fast_bytes, capacity_bytes = int(fast_bytes), int(capacity_bytes)
+        if fast_bytes < 0 or capacity_bytes < 0:
+            raise ValueError(f"recovery bytes must be >= 0, got "
+                             f"({fast_bytes}, {capacity_bytes})")
+        self.fast_bytes_total += fast_bytes
+        self.capacity_bytes_total += capacity_bytes
+        self.recovery_bytes_total += fast_bytes + capacity_bytes
+        return self.meter.charge(fast_bytes, capacity_bytes, qid=qid,
+                                 tenant=tenant, kind="recovery")
 
     # --- CACHE: LRU promotion/eviction ------------------------------------
     def _evict_lru(self, need: int, floor_freq: int | None = None) -> bool:

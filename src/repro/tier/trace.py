@@ -106,7 +106,7 @@ def make_trace(table, spec: TraceSpec = TraceSpec()) -> list[TracedQuery]:
 def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
                  chunk_rows: int = 1024, warmup_fraction: float = 1 / 3,
                  mode: str = "xla_ref", compute_w: float = 0.0,
-                 power_cap=None):
+                 power_cap=None, chaos=None):
     """Closed-loop replay of a trace against a tiered QueryEngine — the
     one attainment methodology shared by benchmarks/tier_bench.py,
     examples/tiered_store.py, and tests.
@@ -124,6 +124,11 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
     sliding-window watt governor (repro.energy.caps) — power-throttled
     service then counts against the same deadlines, so attainment reports
     the SLA cost of the cap.
+
+    `chaos` (a repro.resilience.ChaosHarness) replays the trace under
+    injected faults: recovery extras stretch service on the same clock
+    and typed-degraded answers count as misses — the attainment returned
+    is the *fault-adjusted* number BENCH_resilience plots.
     """
     from repro.energy.meter import EnergyMeter
     from repro.query import QueryEngine
@@ -135,7 +140,7 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
                                    meter=EnergyMeter(tiers, compute_w))
     clk = VirtualClock()
     eng = QueryEngine(table, mode=mode, tiered=pe, clock=clk,
-                      power_cap=power_cap)
+                      power_cap=power_cap, chaos=chaos)
     warmup = int(len(trace) * warmup_fraction) if sla_s is not None else \
         len(trace)
     met = offered = 0

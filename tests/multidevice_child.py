@@ -280,6 +280,70 @@ def check_compressed_store():
     print("OK compressed_store")
 
 
+def check_resilience():
+    """Degraded-mode shard failover on 8 shards: any subset of lost
+    shards re-executes from the host copy bit-exactly (plain + encoded),
+    all-shards-lost raises typed, and the engine-level chaos path keeps
+    every answer exact while charging recovery traffic."""
+    from repro.db import Table
+    from repro.query import Pred, Query, QueryEngine, ShardedTable
+    from repro.resilience import (ChaosHarness, DegradedResultError,
+                                  FaultSpec, execute_degraded)
+    from repro.serve.sla import VirtualClock
+    from repro.store import EncodedTable, ShardedEncodedTable
+    from repro.tier.placement import PlacementEngine, Policy
+    from repro.tier.tiers import paper_tiers
+
+    table = Table.synthetic("t", 100_001, {"a": 8, "b": 8, "w": 16},
+                            seed=11)
+    mesh = make_mesh((8,), ("data",))
+    st = ShardedTable.shard(table, mesh)
+    se = ShardedEncodedTable.shard(EncodedTable.from_table(table), mesh)
+    queries = [
+        Query(Pred("a", "lt", 64), aggregates=("b",)),           # fused
+        Query(Pred("a", "lt", 50) & Pred("w", "ge", 9000),       # mixed AND
+              aggregates=("w", "b")),
+        Query(Pred("a", "gt", 127), aggregates=("b",)),          # empty sel
+    ]
+    for sharded in (st, se):
+        for q in queries:
+            want = sharded.execute(q.plan(), q.aggregates)
+            for lost in ([0], [7], [3, 5], list(range(7))):
+                got, rec_b = execute_degraded(sharded, q.plan(),
+                                              q.aggregates, lost)
+                assert got == want, (lost, got, want)
+                assert rec_b > 0
+            try:
+                execute_degraded(sharded, q.plan(), q.aggregates,
+                                 list(range(8)))
+                raise AssertionError("all-shards-lost did not raise")
+            except DegradedResultError:
+                pass
+
+    # engine-level: seeded shard dropouts, every answer exact, recovery
+    # bytes on the ledger; same seed -> same resilience summary
+    def chaos_run():
+        clock = VirtualClock()
+        pe = PlacementEngine.for_table(st, paper_tiers(st.nbytes // 2),
+                                       Policy.CACHE, chunk_rows=4096)
+        eng = QueryEngine(st, mode="auto", clock=clock, tiered=pe,
+                          chaos=ChaosHarness(
+                              FaultSpec(seed=5, shard_loss_rate=0.5)))
+        want = st.execute(queries[0].plan(), queries[0].aggregates)
+        for _ in range(10):
+            eng.submit(queries[0], deadline=clock() + 10.0)
+            r = eng.run()[0]
+            assert r.aggregates == want and not r.degraded
+        return eng.summary()
+    s1, s2 = chaos_run(), chaos_run()
+    assert s1["resilience"] == s2["resilience"]
+    assert s1["resilience"]["shard_losses"] > 0
+    assert s1["resilience"]["shard_recoveries"] == \
+        s1["resilience"]["shard_losses"]
+    assert s1["tier"]["recovery_bytes"] > 0
+    print("OK resilience")
+
+
 def check_serve_step_sharded():
     from repro.configs import get_config
     from repro.configs.base import ShapeSpec
@@ -305,6 +369,7 @@ if __name__ == "__main__":
         "elastic": check_elastic_rescale,
         "query": check_sharded_query_engine,
         "store": check_compressed_store,
+        "resilience": check_resilience,
     }
     if which == "all":
         for fn in checks.values():

@@ -35,6 +35,34 @@ class TestHeartbeat:
         assert hb.lagging_hosts(behind_steps=10) == ["h1"]
 
 
+class TestHeartbeatDeterminism:
+    def test_injectable_clock_no_sleeps(self, tmp_path):
+        from repro.serve.sla import VirtualClock
+        clk = VirtualClock()
+        a = Heartbeat(tmp_path, "host-a", timeout_s=10.0, clock=clk)
+        b = Heartbeat(tmp_path, "host-b", timeout_s=10.0, clock=clk)
+        a.beat(1)
+        b.beat(1)
+        assert a.dead_hosts() == []
+        clk.advance(11.0)
+        a.beat(2)
+        assert a.dead_hosts() == ["host-b"]
+        b.beat(2)
+        assert a.dead_hosts() == []
+
+    def test_dotted_hostnames_beat_atomically(self, tmp_path):
+        """Hosts named like 'node.0' must write their own heartbeat file
+        (the old with_suffix(.tmp) path mangled dotted names) and leave
+        no temp files behind."""
+        for host in ("node.0", "node.1", "plain"):
+            Heartbeat(tmp_path, host).beat(1)
+        hb = Heartbeat(tmp_path, "node.0")
+        assert hb.fleet() == ["node.0", "node.1", "plain"]
+        leftovers = [p.name for p in tmp_path.iterdir()
+                     if not p.name.endswith(".heartbeat")]
+        assert leftovers == []
+
+
 class TestStraggler:
     def test_flags_slow_steps(self):
         det = StragglerDetector(threshold=2.0, warmup=3)
@@ -104,3 +132,50 @@ class TestSupervisedRestart:
 
         with pytest.raises(RuntimeError, match="persistent"):
             run_supervised(loop, lambda: None, RestartPolicy(max_restarts=2))
+
+
+class TestRestartBackoff:
+    def test_backoff_applied_on_virtual_clock(self):
+        """Regression: backoff_s used to be ignored between restarts.
+        Linear backoff — restart k waits k * backoff_s — on the injected
+        clock, no wall sleeps."""
+        from repro.serve.sla import VirtualClock
+        clk = VirtualClock()
+        calls = {"n": 0}
+
+        def loop(_):
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise RuntimeError("boom")
+            return "done"
+
+        out, policy = run_supervised(
+            loop, lambda: None,
+            RestartPolicy(max_restarts=3, backoff_s=0.5), clock=clk)
+        assert out == "done"
+        assert policy.restarts == 2
+        assert clk() == pytest.approx(0.5 * 1 + 0.5 * 2)
+
+    def test_backoff_sleeps_on_wall_clock(self, monkeypatch):
+        slept = []
+        monkeypatch.setattr(time, "sleep", slept.append)
+        calls = {"n": 0}
+
+        def loop(_):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("boom")
+            return "ok"
+
+        out, policy = run_supervised(
+            loop, lambda: None, RestartPolicy(max_restarts=1, backoff_s=0.2))
+        assert out == "ok"
+        assert slept == [pytest.approx(0.2)]
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError, match="backoff_s"):
+            RestartPolicy(backoff_s=-1.0)
+        with pytest.raises(ValueError, match="max_restarts"):
+            RestartPolicy(max_restarts=-1)
+        with pytest.raises(ValueError, match="restart="):
+            RestartPolicy().backoff(0)

@@ -181,6 +181,83 @@ def test_choose_encoding_never_larger_than_plain(bc):
 
 
 # --------------------------------------------------------------------------
+# resilience invariants (repro.resilience)
+# --------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), stall=st.floats(0.0, 0.6),
+       corrupt=st.floats(0.0, 0.3), timeout_mult=st.floats(0.5, 10.0),
+       cap_factor=st.floats(0.3, 3.0))
+def test_chaos_never_breaks_powercap_or_double_charges(
+        seed, stall, corrupt, timeout_mult, cap_factor):
+    """Under any seeded fault stream (stalls + chunk corruption) and any
+    retry policy, (a) no sliding watt window ever exceeds the PowerCap
+    budget — recovery extras are throttled like all other joules — and
+    (b) the energy ledger holds exactly the placement engine's byte
+    totals with at most one kind="recovery" line per query: retries
+    never double-charge."""
+    from collections import Counter
+
+    from repro.db import Table
+    from repro.energy.caps import PowerCap
+    from repro.query import Pred, Query, QueryEngine
+    from repro.resilience import ChaosHarness, ChunkGuard, FaultSpec, \
+        RetryPolicy
+    from repro.serve.sla import VirtualClock
+    from repro.store import EncodedTable
+    from repro.tier.placement import PlacementEngine, Policy
+    from repro.tier.tiers import paper_tiers
+
+    table = Table.synthetic("p", 2001, {"a": 8, "b": 8}, seed=2)
+    query = Query(Pred("a", "lt", 60), aggregates=("b",))
+
+    def build(power_cap=None, chaos=None):
+        pe = PlacementEngine.for_table(
+            table if chaos is None else chaos.guard.table,
+            paper_tiers(max(1, table.nbytes // 2)), Policy.CACHE,
+            chunk_rows=512)
+        clock = VirtualClock()
+        eng = QueryEngine(chaos.guard.table if chaos else table,
+                          clock=clock, tiered=pe,
+                          power_cap=power_cap, chaos=chaos)
+        return eng, pe, clock
+
+    # probe run sizes the watt budget relative to this workload's natural
+    # power, so cap_factor < 1 genuinely forces throttling
+    eng0, pe0, clk0 = build()
+    for _ in range(3):
+        eng0.submit(query)
+        eng0.run()
+    natural_w = pe0.meter.total_j / eng0.seconds_total
+    cap = PowerCap(cap_factor * natural_w, eng0.seconds_total / 3)
+
+    encoded = EncodedTable.from_table(table, chunk_rows=512)
+    clean_s = pe0.tiers.service_s(512, 0, 1)
+    chaos = ChaosHarness(
+        FaultSpec(seed=seed, stall_rate=stall, corrupt_rate=corrupt),
+        retry=RetryPolicy(timeout_s=timeout_mult * clean_s,
+                          backoff_s=0.5 * clean_s, max_retries=2),
+        guard=ChunkGuard(encoded))
+    if corrupt > 0:
+        chaos.inject_corruption()
+    eng, pe, clock = build(power_cap=cap, chaos=chaos)
+    for _ in range(6):
+        eng.submit(query, deadline=clock() + 1e6)
+        for r in eng.run():
+            assert not r.degraded        # recovery on: repaired, not failed
+
+    assert cap.report(now=clock())["budget_utilization"] <= 1 + 1e-9
+    meter = pe.meter
+    total_bytes = sum(c.fast_bytes + c.capacity_bytes
+                      for c in meter.charges)
+    assert total_bytes == pe.fast_bytes_total + pe.capacity_bytes_total
+    recovery = [c for c in meter.charges if c.kind == "recovery"]
+    assert all(n <= 1 for n in Counter(c.qid for c in recovery).values())
+    assert pe.recovery_bytes_total == sum(
+        c.fast_bytes + c.capacity_bytes for c in recovery)
+    assert meter.recovery_j == sum(c.total_j for c in recovery)
+
+
+# --------------------------------------------------------------------------
 # MoE dispatch invariants
 # --------------------------------------------------------------------------
 @settings(max_examples=15, deadline=None)
