@@ -73,8 +73,28 @@ def check_store() -> str:
     surf = rec["surface"]
     assert surf["verdict_ratio1_10ms"] == "die-stacked", surf
     assert surf["crossover_ratio_10ms"] is not None, surf
+    la = rec["launches"]
+    assert la["per_query"] < la["n_chunks"], \
+        (f"batched execution should launch fewer kernels per query than "
+         f"the table has chunks: {la}")
+    assert rec["encoded_us_per_query"] <= rec["plain_us_per_query"], \
+        (f"warm encoded replay slower than plain: "
+         f"{rec['encoded_us_per_query']} vs {rec['plain_us_per_query']} us")
+    ov = rec["overlap"]
+    pipelined = [p["pipelined_gbps"] for p in ov["points"]]
+    assert pipelined == sorted(pipelined), \
+        f"blended GB/s should rise with the fast fraction: {ov['points']}"
+    for p in ov["points"]:
+        assert p["pipelined_s"] <= p["sync_s"] * (1 + 1e-9), \
+            f"prefetch overlap made the replay slower: {p}"
+        assert p["prefetch_reserved_bytes"] <= p["fast_capacity_bytes"], \
+            f"staging buffer exceeds the fast tier: {p}"
+        assert p["staged_chunks"] > 0, f"pipeline never staged a chunk: {p}"
     return (f"{len(hist)} record(s), ratio={rec['ratio']}, "
             f"hit {tier['plain_hit_rate']}->{tier['encoded_hit_rate']}, "
+            f"launches/q={la['per_query']}(chunks={la['n_chunks']}), "
+            f"overlap {ov['points'][0]['sync_gbps']}->"
+            f"{ov['points'][-1]['pipelined_gbps']} GB/s, "
             f"crossover@10ms={surf['crossover_ratio_10ms']}")
 
 

@@ -19,6 +19,17 @@ plain), all appended to BENCH_store.json at the repo root:
    (1.0, measured) plus `compression_crossover_ratio` at the 10 ms SLA —
    at what ratio does a software-compressed traditional system beat the
    die-stacked baseline?
+5. *Batched launches*: kernel launches per query over the encoded table —
+   the batched executor issues one launch per (column group, encoding),
+   not one per chunk, so launches/query stays below the chunk count.
+6. *Overlap*: the encoded trace replayed with the async prefetch
+   pipeline across a fast-capacity sweep — modeled service is
+   max(scan, stream) per stage instead of the sum, so blended GB/s
+   climbs toward the fast tier's rate as the hit rate rises, with the
+   pipeline's own traffic visible on the prefetch ledger.
+
+Both replay timings are taken warm (one untimed pass first): the store
+measures the scan path, not XLA compile amortization.
 
 Set REPRO_STORE_BENCH_QUICK=1 for a smaller table/trace (CI smoke).
 """
@@ -36,7 +47,10 @@ from repro.db.columnar import BitPackedColumn, Table
 from repro.energy.tco import (cheapest_architecture,
                               compression_crossover_ratio)
 from repro.core.systems import TiB
+from repro.kernels import dispatch
+from repro.query import physical
 from repro.store import EncodedTable
+from repro.store.exec import execute_encoded
 from repro.tier import (Policy, TraceSpec, make_trace, measured_fast_gbps,
                         paper_tiers, replay_trace)
 
@@ -82,6 +96,44 @@ def compressible_table(n_cols: int, n_rows: int, seed: int = 0) -> Table:
     return t
 
 
+def _overlap_sweep(encoded, trace, tiers, chunk_rows):
+    """Replay the encoded trace sync vs pipelined across a fast-capacity
+    sweep. Returns the overlap record: per fast-fraction point, modeled
+    service with and without prefetch, the blended GB/s trajectory
+    toward the fast rate, and the prefetch ledger."""
+    points = []
+    for frac in (0.125, 0.25, 0.5):
+        tw = paper_tiers(max(1, int(encoded.logical_nbytes * frac)),
+                         fast_gbps=tiers.fast.gbps)
+        pe_s, eng_s, _ = replay_trace(encoded, trace, tw, Policy.CACHE,
+                                      chunk_rows=chunk_rows)
+        # a double buffer needs ~one chunk of staging depth, not a cache's
+        # worth: the reservation evicts residents, so an oversized buffer
+        # trades hit rate for overlap and can lose on net
+        buf = max(1, int(tw.fast.capacity / 16))
+        pe_o, eng_o, _ = replay_trace(encoded, trace, tw, Policy.CACHE,
+                                      chunk_rows=chunk_rows,
+                                      prefetch_bytes=buf)
+        ps = pe_o.stats()
+        points.append({
+            "fast_fraction": frac,
+            "hit_rate": round(pe_o.hit_rate, 4),
+            "sync_s": eng_s.seconds_total,
+            "pipelined_s": eng_o.seconds_total,
+            "sync_gbps": round(eng_s.summary()["measured_gbps"], 4),
+            "pipelined_gbps": round(eng_o.summary()["measured_gbps"], 4),
+            "staged_chunks": eng_o.prefetch.stats()["staged_chunks"],
+            "prefetch_reserved_bytes": ps["prefetch_reserved_bytes"],
+            "fast_capacity_bytes": int(tw.fast.capacity),
+            "prefetch_streamed_bytes": ps["prefetch_streamed_bytes"],
+            "prefetch_wasted_bytes": ps["prefetch_wasted_bytes"],
+            "prefetch_j": pe_o.meter.prefetch_j,
+        })
+    return {"fast_gbps": tiers.fast.gbps,
+            "capacity_gbps": tiers.capacity.gbps,
+            "points": points}
+
+
 def rows():
     n_cols, n_rows, chunk_rows, n_queries = _sizes()
     table = compressible_table(n_cols, n_rows, seed=0)
@@ -101,15 +153,32 @@ def rows():
                                         seed=7))
     sla_s = SLA_SLACK * (table.nbytes / n_cols * 2) / tiers.fast.bandwidth
 
+    # warm both execution paths first: one untimed pass compiles every
+    # query shape, so the timed replays measure scans, not XLA compiles
+    slices = physical.table_slices(table)
+    for tq in trace:
+        physical.finalize_aggs(physical.execute(
+            tq.query.plan(), tq.query.aggregates, slices, mode="xla_ref"))
+        execute_encoded(tq.query.plan(), tq.query.aggregates, encoded,
+                        mode="xla_ref")
+
     t0 = time.perf_counter()
     pe_p, eng_p, att_p = replay_trace(table, trace, tiers, Policy.CACHE,
                                       sla_s=sla_s, chunk_rows=chunk_rows)
     plain_us = (time.perf_counter() - t0) / len(trace) * 1e6
+    dispatch.reset_launch_counts()
     t0 = time.perf_counter()
     pe_e, eng_e, att_e = replay_trace(encoded, trace, tiers, Policy.CACHE,
                                       sla_s=sla_s, chunk_rows=chunk_rows)
     enc_us = (time.perf_counter() - t0) / len(trace) * 1e6
+    launches = {
+        "per_query": round(dispatch.total_launches() / len(trace), 2),
+        "n_chunks": encoded.n_chunks,
+        "by_family": dispatch.launch_counts(),
+    }
     se, sp = eng_e.summary(), eng_p.summary()
+
+    overlap = _overlap_sweep(encoded, trace, tiers, chunk_rows)
 
     surf_ratio1 = cheapest_architecture(
         PAPER_DB, PAPER_ACCESSED * PAPER_DB, 0.010, 1e6,
@@ -150,8 +219,13 @@ def rows():
             "verdict_measured_10ms": surf_measured["winner"],
             "crossover_ratio_10ms": crossover,
         },
+        "launches": launches,
+        "plain_us_per_query": round(plain_us, 1),
+        "encoded_us_per_query": round(enc_us, 1),
+        "overlap": overlap,
     }
     append_trajectory(BENCH_PATH, record)
+    last = overlap["points"][-1]
     return [
         ("store/encode", encode_us,
          f"ratio={ratio:.2f}x,"
@@ -162,7 +236,14 @@ def rows():
         ("store/trace/encoded", enc_us,
          f"hit={pe_e.hit_rate:.2f},"
          f"phys={se['measured_gbps']:.2f}GBps,"
-         f"eff={se['effective_gbps']:.2f}GBps,att={att_e:.2f}"),
+         f"eff={se['effective_gbps']:.2f}GBps,att={att_e:.2f},"
+         f"launches/q={launches['per_query']}"
+         f"(chunks={launches['n_chunks']})"),
+        ("store/overlap", 0.0,
+         ",".join(f"f={p['fast_fraction']}:"
+                  f"{p['sync_gbps']}->{p['pipelined_gbps']}GBps"
+                  for p in overlap["points"])
+         + f",staged={last['staged_chunks']}"),
         ("store/surface/10ms", 0.0,
          f"ratio1={surf_ratio1['winner']},"
          f"measured={surf_measured['winner']},"

@@ -56,7 +56,9 @@ class EnergyCharge:
     capacity_j: float
     compute_j: float = 0.0
     busy_s: float = 0.0          # modeled busy time the compute term used
-    kind: str = "query"          # "query" | "recovery" (retry/repair bytes)
+    kind: str = "query"          # "query" | "recovery" (retry/repair
+    #                              bytes) | "prefetch" (overlap traffic:
+    #                              staged fast re-reads + cancelled waste)
 
     @property
     def memory_j(self) -> float:
@@ -170,11 +172,19 @@ class EnergyMeter:
         """Joules on kind="recovery" lines — what the faults cost."""
         return sum(c.total_j for c in self.charges if c.kind == "recovery")
 
+    @property
+    def prefetch_j(self) -> float:
+        """Joules on kind="prefetch" lines — what the overlap cost (staged
+        fast-buffer re-reads plus streamed-then-cancelled waste; the
+        nominal capacity stream stays on the query line, charged once)."""
+        return sum(c.total_j for c in self.charges if c.kind == "prefetch")
+
     def summary(self) -> dict:
         n = sum(1 for c in self.charges if c.kind == "query")
         return {
             "queries": n,
             "recovery_j": self.recovery_j,
+            "prefetch_j": self.prefetch_j,
             "fast_j": self.fast_j,
             "capacity_j": self.capacity_j,
             "compute_j": self.compute_j,

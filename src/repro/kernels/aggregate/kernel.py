@@ -76,6 +76,90 @@ def _agg_kernel(x_ref, m_ref, o_ref, acc, *, code_bits: int, vmax: int):
         o_ref[0, 4] = acc[0, 4]
 
 
+def _agg_batched_kernel(x_ref, m_ref, o_ref, acc, *, code_bits: int,
+                        vmax: int):
+    """Batched variant: grid (n_chunks, inner), one (1, 5) partial row per
+    chunk. Inner steps iterate fastest, so the accumulator resets at inner
+    step 0 and writes back normalized at the last inner step — each row is
+    bit-identical to the per-chunk `_agg_kernel`."""
+    i = pl.program_id(1)
+    ni = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _():
+        acc[0, 0] = jnp.int32(0)      # sum_lo (16-bit plane, denormalized)
+        acc[0, 1] = jnp.int32(0)      # sum_hi
+        acc[0, 2] = jnp.int32(0)      # count
+        acc[0, 3] = jnp.int32(vmax)   # min
+        acc[0, 4] = jnp.int32(0)      # max
+
+    x = x_ref[0]
+    m = m_ref[0]
+    c = 32 // code_bits
+    value_mask = jnp.uint32((1 << (code_bits - 1)) - 1)
+
+    s = jnp.int32(0)
+    cnt = jnp.int32(0)
+    mn = jnp.int32(vmax)
+    mx = jnp.int32(0)
+    for f in range(c):                       # static unroll over fields
+        vals = ((x >> jnp.uint32(f * code_bits)) & value_mask).astype(
+            jnp.int32)
+        bit = ((m >> jnp.uint32(f * code_bits + code_bits - 1))
+               & jnp.uint32(1)).astype(jnp.int32)
+        sel = bit == 1
+        s += jnp.sum(vals * bit)
+        cnt += jnp.sum(bit)
+        mn = jnp.minimum(mn, jnp.min(jnp.where(sel, vals, vmax)))
+        mx = jnp.maximum(mx, jnp.max(jnp.where(sel, vals, 0)))
+
+    acc[0, 0] += s & 0xFFFF
+    acc[0, 1] += s >> 16
+    acc[0, 2] += cnt
+    acc[0, 3] = jnp.minimum(acc[0, 3], mn)
+    acc[0, 4] = jnp.maximum(acc[0, 4], mx)
+
+    @pl.when(i == ni - 1)
+    def _():
+        lo = acc[0, 0]
+        o_ref[0, 0] = lo & 0xFFFF             # normalized planes
+        o_ref[0, 1] = acc[0, 1] + (lo >> 16)
+        o_ref[0, 2] = acc[0, 2]
+        o_ref[0, 3] = acc[0, 3]
+        o_ref[0, 4] = acc[0, 4]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("code_bits", "block_rows", "interpret"))
+def aggregate_batched_packed(words3d, mask3d, *, code_bits: int,
+                             block_rows: int = DEFAULT_BLOCK_ROWS,
+                             interpret: bool = True):
+    """(n_chunks, rows, 128) packed words + packed masks ->
+    int32[n_chunks, 5], one [sum_lo, sum_hi, count, min, max] row per
+    chunk, all chunks in ONE kernel launch. Padded words carry zero mask
+    delimiter bits and contribute nothing."""
+    n_chunks, rows = words3d.shape[0], words3d.shape[1]
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        words3d = jnp.pad(words3d, ((0, 0), (0, pad), (0, 0)))
+        mask3d = jnp.pad(mask3d, ((0, 0), (0, pad), (0, 0)))
+        rows += pad
+    vmax = (1 << (code_bits - 1)) - 1
+    kernel = functools.partial(_agg_batched_kernel, code_bits=code_bits,
+                               vmax=vmax)
+    spec = pl.BlockSpec((1, block_rows, LANES), lambda c, i: (c, i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks, rows // block_rows),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, 5), lambda c, i: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, 5), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, 5), jnp.int32)],
+        interpret=interpret,
+    )(words3d, mask3d)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("code_bits", "block_rows", "interpret"))
 def aggregate_packed(words2d, mask2d, *, code_bits: int,

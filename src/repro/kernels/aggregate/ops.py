@@ -9,6 +9,7 @@ per-tile partials stay exact.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch, tune
@@ -42,6 +43,7 @@ def aggregate(words, mask_words, code_bits: int,
     Codes in padded tail words have mask delimiter bits 0 and are ignored.
     """
     r = dispatch.resolve(mode)
+    dispatch.count_launch("aggregate")
     if not r.use_pallas:
         return ref.aggregate_ref(words, mask_words, code_bits)
     if words.size == 0:              # zero-row grid is undefined
@@ -65,6 +67,53 @@ def aggregate(words, mask_words, code_bits: int,
                              interpret=r.interpret)
     return {"sum_lo": out[0, 0], "sum_hi": out[0, 1], "count": out[0, 2],
             "min": out[0, 3], "max": out[0, 4]}
+
+
+def to3d_words(words3, lanes: int = LANES):
+    """(n_chunks, n_words) packed planes -> (n_chunks, rows, lanes) kernel
+    tiles (lane-padded with zero words, which no mask ever selects)."""
+    w = jnp.asarray(words3, jnp.uint32)
+    n_chunks, n_words = w.shape
+    pad = (-n_words) % lanes
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    return w.reshape(n_chunks, -1, lanes)
+
+
+def aggregate_batched(words3, mask3, code_bits: int,
+                      block_rows: int | None = None, mode=None):
+    """All chunks of one column in ONE launch: (n_chunks, n_words) packed
+    words + packed masks -> int32[n_chunks, 5], each row bit-identical to
+    the per-chunk `aggregate` at that chunk's words/mask."""
+    r = dispatch.resolve(mode)
+    dispatch.count_launch("aggregate")
+    w = jnp.asarray(words3, jnp.uint32)
+    if w.shape[0] == 0 or w.shape[1] == 0:   # empty-selection identities
+        vmax = (1 << (code_bits - 1)) - 1
+        return jnp.tile(jnp.asarray([[0, 0, 0, vmax, 0]], jnp.int32),
+                        (w.shape[0], 1))
+    if not r.use_pallas:
+        return _batched_ref_jit(jnp.asarray(words3, jnp.uint32),
+                                jnp.asarray(mask3, jnp.uint32), code_bits)
+    w3 = to3d_words(words3)
+    m3 = to3d_words(mask3)
+    rows = w3.shape[1]
+    br = block_rows
+    if br is None:
+        br = min(DEFAULT_BLOCK_ROWS, rows)
+        if r.tuned:
+            br = tune.best_params("aggregate",
+                                  tune.shape_key(rows=rows, bits=code_bits),
+                                  {"block_rows": br})["block_rows"]
+            br = max(1, min(int(br), rows))
+    br = min(br, sum_bound_block_rows(code_bits))
+    return K.aggregate_batched_packed(w3, m3, code_bits=code_bits,
+                                      block_rows=br, interpret=r.interpret)
+
+
+# the ref oracle compiled once per plane shape: word planes and masks are
+# traced, so a warm trace replay of any query mix never retraces
+_batched_ref_jit = jax.jit(ref.aggregate_batched_ref, static_argnums=2)
 
 
 def _example(rng):

@@ -36,6 +36,35 @@ def identity(code_bits: int) -> dict:
             "max": jnp.int32(0)}
 
 
+def aggregate_batched_ref(words3, mask3, code_bits: int):
+    """Vectorized oracle for the batched masked aggregate:
+    (n_chunks, n_words) packed codes + packed masks -> int32[n_chunks, 5]
+    of [sum_lo, sum_hi, count, min, max] rows in a single jnp dispatch.
+
+    Exact without split_sum's staging: each chunk holds at most
+    MAX_CHUNK_ROWS (65536) codes < 2^15, so the per-chunk int32 sum stays
+    below 2^31; the planes are normalized (lo < 2^16), which makes them
+    bit-identical to every other aggregate path's output."""
+    w = jnp.asarray(words3, jnp.uint32)
+    m = jnp.asarray(mask3, jnp.uint32)
+    c = 32 // code_bits
+    vshifts = jnp.arange(c, dtype=jnp.uint32) * code_bits
+    mshifts = vshifts + code_bits - 1
+    vals = ((w[:, :, None] >> vshifts) & jnp.uint32(
+        (1 << code_bits) - 1)).astype(jnp.int32)
+    sel = ((m[:, :, None] >> mshifts) & jnp.uint32(1)).astype(bool)
+    vmax = jnp.int32((1 << (code_bits - 1)) - 1)
+    ax = (1, 2)
+    s = jnp.sum(jnp.where(sel, vals, 0), axis=ax)
+    return jnp.stack([
+        s & 0xFFFF,
+        s >> 16,
+        jnp.sum(sel.astype(jnp.int32), axis=ax),
+        jnp.min(jnp.where(sel, vals, vmax), axis=ax),
+        jnp.max(jnp.where(sel, vals, 0), axis=ax),
+    ], axis=1)
+
+
 def aggregate_ref(words, mask_words, code_bits: int):
     """Returns dict(sum_lo, sum_hi, count, min, max) over codes whose
     delimiter bit is set in mask_words. Empty selection: sums/count/max 0,

@@ -103,3 +103,33 @@ def get(name: str) -> KernelOp:
 def registered() -> dict[str, KernelOp]:
     ensure_registered()
     return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# launch accounting
+# --------------------------------------------------------------------------
+# Per-family dispatch counters so tests and benchmarks can assert that
+# batched execution really collapses N per-chunk launches into ~1 per
+# (column, encoding) group. A "launch" is one host->device dispatch of a
+# family's public op — Pallas kernel and XLA_REF oracle alike (the cost
+# being measured is the per-call round trip, which both pay).
+
+_LAUNCHES: dict[str, int] = {}
+
+
+def count_launch(name: str, n: int = 1) -> None:
+    """Record `n` dispatches for kernel family `name`."""
+    _LAUNCHES[name] = _LAUNCHES.get(name, 0) + n
+
+
+def launch_counts() -> dict[str, int]:
+    """Snapshot of per-family launch counts since the last reset."""
+    return dict(_LAUNCHES)
+
+
+def total_launches() -> int:
+    return sum(_LAUNCHES.values())
+
+
+def reset_launch_counts() -> None:
+    _LAUNCHES.clear()

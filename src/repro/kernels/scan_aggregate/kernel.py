@@ -88,6 +88,115 @@ def _fused_kernel(p_ref, a_ref, v_ref, o_ref, acc, *, op: str,
         o_ref[0, 4] = acc[0, 4]
 
 
+def _fused_batched_kernel(const_ref, flag_ref, p_ref, a_ref, v_ref, o_ref,
+                          acc, *, delim, low, code_bits: int, vmax: int):
+    """Batched variant: grid (n_chunks, inner), one (1, 5) partial row per
+    chunk. The per-chunk predicate rides in as data — scalar-prefetched
+    planes of packed constants and flag words (bit0 = eq primitive,
+    bit1 = invert) indexed by the chunk grid coordinate — so chunks whose
+    FOR frames translated the constant differently still share one launch.
+    Inner steps iterate fastest: reset at inner 0, normalized writeback at
+    the last inner step, bit-identical per chunk to `_fused_kernel`."""
+    c_id = pl.program_id(0)
+    i = pl.program_id(1)
+    ni = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _():
+        acc[0, 0] = jnp.int32(0)      # sum_lo (16-bit plane, denormalized)
+        acc[0, 1] = jnp.int32(0)      # sum_hi
+        acc[0, 2] = jnp.int32(0)      # count
+        acc[0, 3] = jnp.int32(vmax)   # min
+        acc[0, 4] = jnp.int32(0)      # max
+
+    x = p_ref[0]
+    h = jnp.uint32(delim)
+    # packed constants keep delimiter bits 0, so int32 -> uint32 is safe
+    cst = const_ref[c_id].astype(jnp.uint32)
+    flags = flag_ref[c_id]
+    m_ge = ((x | h) - cst) & h
+    m_eq = (~(((x ^ cst) | h) - jnp.uint32(low))) & h
+    m = jnp.where((flags & 1) == 1, m_eq, m_ge)
+    m = jnp.where((flags & 2) == 2, m ^ h, m)   # m subset-of h: ^h == ~m&h
+    m = m & v_ref[0]
+
+    a = a_ref[0]
+    c = 32 // code_bits
+    value_mask = jnp.uint32((1 << (code_bits - 1)) - 1)
+    s = jnp.int32(0)
+    cnt = jnp.int32(0)
+    mn = jnp.int32(vmax)
+    mx = jnp.int32(0)
+    for f in range(c):                       # static unroll over fields
+        vals = ((a >> jnp.uint32(f * code_bits)) & value_mask).astype(
+            jnp.int32)
+        bit = ((m >> jnp.uint32(f * code_bits + code_bits - 1))
+               & jnp.uint32(1)).astype(jnp.int32)
+        sel = bit == 1
+        s += jnp.sum(vals * bit)
+        cnt += jnp.sum(bit)
+        mn = jnp.minimum(mn, jnp.min(jnp.where(sel, vals, vmax)))
+        mx = jnp.maximum(mx, jnp.max(jnp.where(sel, vals, 0)))
+
+    acc[0, 0] += s & 0xFFFF
+    acc[0, 1] += s >> 16
+    acc[0, 2] += cnt
+    acc[0, 3] = jnp.minimum(acc[0, 3], mn)
+    acc[0, 4] = jnp.maximum(acc[0, 4], mx)
+
+    @pl.when(i == ni - 1)
+    def _():
+        lo = acc[0, 0]
+        o_ref[0, 0] = lo & 0xFFFF             # normalized planes
+        o_ref[0, 1] = acc[0, 1] + (lo >> 16)
+        o_ref[0, 2] = acc[0, 2]
+        o_ref[0, 3] = acc[0, 3]
+        o_ref[0, 4] = acc[0, 4]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("code_bits", "block_rows", "interpret"))
+def scan_aggregate_batched_packed(consts, flags, pred3d, agg3d, valid3d, *,
+                                  code_bits: int,
+                                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                                  interpret: bool = True):
+    """All chunks of one (pred, agg) column pair in ONE launch.
+
+    consts/flags: (n_chunks,) int32 scalar planes from
+    scan_filter.ops.packed_triples (per-chunk packed constant + eq/invert
+    flags), scalar-prefetched so the grid's chunk coordinate selects each
+    tile's predicate without re-specializing the kernel.
+    pred3d/agg3d/valid3d: (n_chunks, rows, 128) packed word planes.
+    Returns int32[n_chunks, 5]; each row is bit-identical to the per-chunk
+    `scan_aggregate_packed` at that chunk's (constant, op, invert)."""
+    n_chunks, rows = pred3d.shape[0], pred3d.shape[1]
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        pred3d = jnp.pad(pred3d, ((0, 0), (0, pad), (0, 0)))
+        agg3d = jnp.pad(agg3d, ((0, 0), (0, pad), (0, 0)))
+        valid3d = jnp.pad(valid3d, ((0, 0), (0, pad), (0, 0)))
+        rows += pad
+    delim, low, value = field_masks(code_bits)
+    kernel = functools.partial(_fused_batched_kernel, delim=int(delim),
+                               low=int(low), code_bits=code_bits,
+                               vmax=int(value))
+    spec = pl.BlockSpec((1, block_rows, LANES), lambda c, i, *_: (c, i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_chunks, rows // block_rows),
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((1, 5), lambda c, i, *_: (c, 0)),
+        scratch_shapes=[pltpu.VMEM((1, 5), jnp.int32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_chunks, 5), jnp.int32),
+        interpret=interpret,
+    )(consts, flags, pred3d, agg3d, valid3d)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("constant", "op", "invert", "code_bits",
                                     "block_rows", "interpret"))

@@ -9,6 +9,9 @@ and a plain validity-mask aggregate respectively.
 """
 from __future__ import annotations
 
+from functools import partial
+
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch, tune
@@ -16,6 +19,7 @@ from repro.kernels.aggregate import ops as agg_ops
 from repro.kernels.aggregate import ref as agg_ref
 from repro.kernels.scan_aggregate import kernel as K
 from repro.kernels.scan_aggregate import ref
+from repro.kernels.scan_filter import ops as scan_ops
 from repro.kernels.scan_filter.kernel import DEFAULT_BLOCK_ROWS, LANES
 from repro.kernels.scan_filter.ref import OPS
 
@@ -34,6 +38,7 @@ def scan_aggregate(pred_words, agg_words, valid_words, constant: int,
     if op not in OPS:
         raise ValueError(f"unknown predicate op {op!r}; expected one of {OPS}")
     r = dispatch.resolve(mode)
+    dispatch.count_launch("scan_aggregate")
     if not r.use_pallas:
         return ref.scan_aggregate_ref(pred_words, agg_words, valid_words,
                                       constant, op, code_bits)
@@ -78,6 +83,61 @@ def scan_aggregate(pred_words, agg_words, valid_words, constant: int,
                                   block_rows=br, interpret=r.interpret)
     return {"sum_lo": out[0, 0], "sum_hi": out[0, 1], "count": out[0, 2],
             "min": out[0, 3], "max": out[0, 4]}
+
+
+def scan_aggregate_batched(pred3, agg3, valid3, triples, code_bits: int,
+                           block_rows: int | None = None, mode=None):
+    """All chunks of one (pred, agg) column pair in ONE launch.
+
+    pred3/agg3/valid3: (n_chunks, n_words) packed word planes (every
+    chunk already repacked to the shared `code_bits`). triples: per-chunk
+    canonical (prim, constant, invert) from scan_filter.ops.canonical_pred
+    — per-chunk FOR frames translate the constant differently, and the
+    batched kernel carries that difference as scalar-prefetched data.
+    Returns int32[n_chunks, 5]; each row is bit-identical to the
+    per-chunk `scan_aggregate` composition for that chunk."""
+    r = dispatch.resolve(mode)
+    dispatch.count_launch("scan_aggregate")
+    p = jnp.asarray(pred3, jnp.uint32)
+    n_chunks = p.shape[0]
+    if len(triples) != n_chunks:
+        raise ValueError(f"{len(triples)} triples for {n_chunks} chunks")
+    if n_chunks == 0 or p.shape[1] == 0:     # empty-selection identities
+        vmax = (1 << (code_bits - 1)) - 1
+        return jnp.tile(jnp.asarray([[0, 0, 0, vmax, 0]], jnp.int32),
+                        (n_chunks, 1))
+    if not r.use_pallas:
+        consts, flags = scan_ops.packed_triples(triples, code_bits)
+        return _fused_batched_ref(p, jnp.asarray(agg3, jnp.uint32),
+                                  jnp.asarray(valid3, jnp.uint32),
+                                  consts, flags, code_bits)
+
+    consts, flags = scan_ops.packed_triples(triples, code_bits)
+    p3 = agg_ops.to3d_words(p)
+    a3 = agg_ops.to3d_words(agg3)
+    v3 = agg_ops.to3d_words(valid3)
+    rows = p3.shape[1]
+    br = block_rows
+    if br is None:
+        br = min(DEFAULT_BLOCK_ROWS, rows)
+        if r.tuned:
+            br = tune.best_params("scan_aggregate",
+                                  tune.shape_key(rows=rows, bits=code_bits),
+                                  {"block_rows": br})["block_rows"]
+            br = max(1, min(int(br), rows))
+    br = min(br, agg_ops.sum_bound_block_rows(code_bits))
+    return K.scan_aggregate_batched_packed(
+        jnp.asarray(consts), jnp.asarray(flags), p3, a3, v3,
+        code_bits=code_bits, block_rows=br, interpret=r.interpret)
+
+
+@partial(jax.jit, static_argnums=5)
+def _fused_batched_ref(p3, a3, v3, consts, flags, code_bits: int):
+    """The whole ref fused path as one compiled call — mask planes and
+    batched aggregate fuse, and the traced constants mean every query at
+    a given plane shape reuses the same executable."""
+    mask3 = scan_ops.mask_planes(p3, consts, flags, code_bits) & v3
+    return agg_ref.aggregate_batched_ref(a3, mask3, code_bits)
 
 
 def _example(rng):

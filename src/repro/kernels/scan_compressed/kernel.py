@@ -64,6 +64,81 @@ def _rle_kernel(v_ref, l_ref, o_ref, acc, *, op: str, constant: int,
         o_ref[0, 4] = acc[0, 4]
 
 
+def _rle_batched_kernel(v_ref, l_ref, o_ref, acc, *, op: str, constant: int,
+                        vmax: int):
+    """Batched variant: grid (n_chunks, inner); one (1, 5) partial row per
+    chunk. The inner dimension iterates fastest (TPU grid order), so the
+    per-chunk accumulator resets at inner step 0 and writes back normalized
+    at the last inner step — chunk c's partial never sees chunk c±1's
+    tiles, keeping every row bit-identical to the per-chunk kernel."""
+    i = pl.program_id(1)
+    ni = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _():
+        acc[0, 0] = jnp.int32(0)      # raw sum (chunk-bounded, exact)
+        acc[0, 1] = jnp.int32(0)      # unused until the final normalize
+        acc[0, 2] = jnp.int32(0)      # count
+        acc[0, 3] = jnp.int32(vmax)   # min
+        acc[0, 4] = jnp.int32(0)      # max
+
+    v = v_ref[0]
+    l = l_ref[0]
+    c = jnp.int32(constant)
+    cmp = {"lt": v < c, "le": v <= c, "gt": v > c, "ge": v >= c,
+           "eq": v == c, "ne": v != c}[op]
+    sel = cmp & (l > 0)
+
+    acc[0, 0] += jnp.sum(jnp.where(sel, v * l, 0))
+    acc[0, 2] += jnp.sum(jnp.where(sel, l, 0))
+    acc[0, 3] = jnp.minimum(acc[0, 3], jnp.min(jnp.where(sel, v, vmax)))
+    acc[0, 4] = jnp.maximum(acc[0, 4], jnp.max(jnp.where(sel, v, 0)))
+
+    @pl.when(i == ni - 1)
+    def _():
+        s = acc[0, 0]
+        o_ref[0, 0] = s & 0xFFFF              # normalized sum planes
+        o_ref[0, 1] = s >> 16
+        o_ref[0, 2] = acc[0, 2]
+        o_ref[0, 3] = acc[0, 3]
+        o_ref[0, 4] = acc[0, 4]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("constant", "op", "code_bits",
+                                    "block_rows", "interpret"))
+def rle_scan_aggregate_batched_packed(values3d, lengths3d, *, constant: int,
+                                      op: str, code_bits: int,
+                                      block_rows: int = DEFAULT_BLOCK_ROWS,
+                                      interpret: bool = True):
+    """(n_chunks, rows, 128) int32 run planes -> int32[n_chunks, 5]: one
+    [sum_lo, sum_hi, count, min, max] row per chunk, all chunks in ONE
+    kernel launch. Rows are zero-padded per chunk to the block multiple
+    and across chunks to the widest chunk; padded runs carry length 0 and
+    contribute to no accumulator, so each output row equals the per-chunk
+    `rle_scan_aggregate_packed` bit-for-bit."""
+    n_chunks, rows = values3d.shape[0], values3d.shape[1]
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        values3d = jnp.pad(values3d, ((0, 0), (0, pad), (0, 0)))
+        lengths3d = jnp.pad(lengths3d, ((0, 0), (0, pad), (0, 0)))
+        rows += pad
+    vmax = (1 << (code_bits - 1)) - 1
+    kernel = functools.partial(_rle_batched_kernel, op=op,
+                               constant=int(constant), vmax=vmax)
+    spec = pl.BlockSpec((1, block_rows, LANES), lambda c, i: (c, i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks, rows // block_rows),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, 5), lambda c, i: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, 5), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, 5), jnp.int32)],
+        interpret=interpret,
+    )(values3d, lengths3d)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("constant", "op", "code_bits",
                                     "block_rows", "interpret"))

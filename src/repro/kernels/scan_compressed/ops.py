@@ -35,6 +35,7 @@ def rle_scan_aggregate(values, lengths, constant: int, op: str,
         raise ValueError(f"unknown predicate op {op!r}; expected one of "
                          f"{OPS}")
     r = dispatch.resolve(mode)
+    dispatch.count_launch("scan_compressed")
     if not r.use_pallas:
         return ref.rle_scan_aggregate_ref(values, lengths, constant, op,
                                           code_bits)
@@ -61,6 +62,54 @@ def rle_scan_aggregate(values, lengths, constant: int, op: str,
                                       block_rows=br, interpret=r.interpret)
     return {"sum_lo": out[0, 0], "sum_hi": out[0, 1], "count": out[0, 2],
             "min": out[0, 3], "max": out[0, 4]}
+
+
+def rle_scan_aggregate_batched(planes, constant: int, op: str,
+                               code_bits: int,
+                               block_rows: int | None = None, mode=None):
+    """All RLE chunks of a column in ONE launch.
+
+    planes: sequence of (values, lengths) run-plane pairs, one per chunk
+    (ragged run counts allowed). Returns int32[n_chunks, 5] — one
+    [sum_lo, sum_hi, count, min, max] row per chunk, bit-identical to
+    calling `rle_scan_aggregate` per chunk: ragged chunks are padded to
+    the widest with zero-length runs, which select nothing.
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown predicate op {op!r}; expected one of "
+                         f"{OPS}")
+    r = dispatch.resolve(mode)
+    dispatch.count_launch("scan_compressed")
+    n_chunks = len(planes)
+    if n_chunks == 0:
+        return jnp.zeros((0, 5), jnp.int32)
+
+    def to2d(x):
+        x = jnp.asarray(x, jnp.int32)
+        return jnp.pad(x, (0, (-x.shape[0]) % LANES)).reshape(-1, LANES)
+
+    pairs = [(to2d(v), to2d(l)) for v, l in planes]
+    rows = max(max(v.shape[0] for v, _ in pairs), 1)
+
+    def lift(x):
+        return jnp.pad(x, ((0, rows - x.shape[0]), (0, 0)))
+
+    v3 = jnp.stack([lift(v) for v, _ in pairs])
+    l3 = jnp.stack([lift(l) for _, l in pairs])
+    if not r.use_pallas:
+        return ref.rle_scan_aggregate_batched_ref(v3, l3, constant, op,
+                                                  code_bits)
+    br = block_rows
+    if br is None:
+        br = min(DEFAULT_BLOCK_ROWS, rows)
+        if r.tuned:
+            br = tune.best_params("scan_compressed",
+                                  tune.shape_key(rows=rows, bits=code_bits),
+                                  {"block_rows": br})["block_rows"]
+            br = max(1, min(int(br), rows))
+    return K.rle_scan_aggregate_batched_packed(
+        v3, l3, constant=int(constant), op=op, code_bits=code_bits,
+        block_rows=br, interpret=r.interpret)
 
 
 def _example(rng):

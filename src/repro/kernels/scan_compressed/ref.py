@@ -44,3 +44,28 @@ def rle_scan_aggregate_ref(values, lengths, constant: int, op: str,
         "min": jnp.min(jnp.where(sel, v, vmax)),
         "max": jnp.max(jnp.where(sel, v, 0)),
     }
+
+
+def rle_scan_aggregate_batched_ref(values3d, lengths3d, constant: int,
+                                   op: str, code_bits: int):
+    """Vectorized oracle for the batched RLE kernel: (n_chunks, rows, 128)
+    run planes -> int32[n_chunks, 5] of [sum_lo, sum_hi, count, min, max]
+    rows, one per chunk, in a single jnp dispatch. Zero-length padding
+    runs (lane/block/width padding alike) select nothing, so each row
+    matches the per-chunk `rle_scan_aggregate_ref` bit-for-bit."""
+    if op not in OPS:
+        raise ValueError(f"unknown predicate op {op!r}; expected one of "
+                         f"{OPS}")
+    v = jnp.asarray(values3d, jnp.int32)
+    l = jnp.asarray(lengths3d, jnp.int32)
+    vmax = jnp.int32((1 << (code_bits - 1)) - 1)
+    sel = _CMP[op](v, jnp.int32(constant)) & (l > 0)
+    ax = (1, 2)
+    s = jnp.sum(jnp.where(sel, v * l, 0), axis=ax)
+    return jnp.stack([
+        s & 0xFFFF,
+        s >> 16,
+        jnp.sum(jnp.where(sel, l, 0), axis=ax),
+        jnp.min(jnp.where(sel, v, vmax), axis=ax),
+        jnp.max(jnp.where(sel, v, 0), axis=ax),
+    ], axis=1)

@@ -81,12 +81,24 @@ class QueryEngine:
 
     def __init__(self, table, *, mode=KernelMode.AUTO,
                  clock=time.perf_counter, est_gbps: float = 1.0,
-                 tiered=None, power_cap=None, chaos=None):
+                 tiered=None, power_cap=None, chaos=None, prefetch=None):
         self.table = table
         self.mode = KernelMode(mode)
         self.tiered = tiered
         self.power_cap = power_cap
         self.chaos = chaos
+        self.prefetch = prefetch
+        if prefetch is not None:
+            if tiered is None:
+                # the pipeline overlaps *modeled* tier reads; without the
+                # tier model there is nothing to overlap
+                raise ValueError(
+                    "prefetch needs the tiered service model; pass "
+                    "tiered=repro.tier.PlacementEngine(...) as well")
+            if prefetch.pe is not tiered:
+                raise ValueError(
+                    "prefetch pipeline was built over a different "
+                    "PlacementEngine than this engine's tiered=")
         if chaos is not None:
             if tiered is None:
                 # faults are modeled service/byte penalties on the tier
@@ -184,7 +196,13 @@ class QueryEngine:
                 + meter.compute_w * self.n_shards * busy_s)
 
     def _est_service_s(self, p: _Pending) -> float:
-        est = p.bytes_scanned / max(self.measured_bps, 1e-9)
+        if self.prefetch is not None and p.chunks is not None:
+            # admission prices the pipelined read, not the sync sum —
+            # plan() is pure, so estimating cannot move placement state
+            est = self.prefetch.plan(p.chunks,
+                                     chips=self.n_shards).service_s
+        else:
+            est = p.bytes_scanned / max(self.measured_bps, 1e-9)
         if self.chaos is not None:
             # price expected recovery overhead at admission: a query the
             # fault rate would push past its deadline is rejected here
@@ -261,13 +279,26 @@ class QueryEngine:
                     aggs, acc, busy, query_j, error = \
                         self.chaos.run_query(self, pend, t0)
                 else:
+                    # prefetch plans against residency *before* on_access
+                    # mutates it — the same residency the charge uses
+                    pplan = None
+                    if self.prefetch is not None:
+                        pplan = self.prefetch.plan(pend.chunks,
+                                                   chips=self.n_shards)
+                        self.prefetch.begin(pplan, pend.chunks)
                     aggs = self._execute(pend.query)
                     acc = self.tiered.on_access(pend.chunks, qid=pend.qid,
                                                 tenant=pend.tenant)
-                    busy = self.tiered.service_s(acc, self.n_shards)
+                    busy = (pplan.service_s if pplan is not None
+                            else self.tiered.service_s(acc, self.n_shards))
                     self.tiered.meter.charge_compute(acc.charge, busy,
                                                      self.n_shards)
                     query_j = acc.charge.total_j
+                    if pplan is not None:
+                        line = self.prefetch.finish(pplan, qid=pend.qid,
+                                                    tenant=pend.tenant)
+                        if line is not None:
+                            query_j += line.total_j
                 service = busy
                 if self.power_cap is not None:
                     # race-to-idle throttling: the governor stretches wall
@@ -329,6 +360,8 @@ class QueryEngine:
         if self.tiered is not None:
             out["tier"] = self.tiered.stats(self.n_shards)
             out["energy"] = self.tiered.meter.summary()
+        if self.prefetch is not None:
+            out["prefetch"] = self.prefetch.stats()
         if self.power_cap is not None:
             out["power"] = self.power_cap.report(now=self.clock())
         if self.chaos is not None:

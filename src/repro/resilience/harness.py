@@ -38,6 +38,11 @@ class ChaosHarness:
     query — the no-recovery baseline BENCH_resilience compares against.
     """
 
+    # reserved stall-draw slot for prefetch streams: far above any retry
+    # policy's attempt numbers, so stream-stall draws are independent of
+    # (and never aliased with) the fast-read stall draws per chunk
+    PREFETCH_ATTEMPT = 1 << 20
+
     def __init__(self, spec: FaultSpec | FaultInjector, *,
                  retry: RetryPolicy | None = None,
                  breaker: CircuitBreaker | None = None,
@@ -54,6 +59,7 @@ class ChaosHarness:
             self.guard.repair = self.recover
         # fault/recovery counters (summary + modeled MTTR)
         self.stalls = 0
+        self.prefetch_stalls = 0     # capacity->fast streams that stalled
         self.retries = 0
         self.failovers = 0
         self.repairs = 0
@@ -125,6 +131,18 @@ class ChaosHarness:
         else:
             fast_cids = {cid: b for cid, b in pend.chunks.items()
                          if pe.resident(cid)}
+        # prefetch (if the engine carries a pipeline) plans against the
+        # same pre-access residency; capacity->fast streams can stall too
+        # — a seeded draw at a reserved attempt slot, independent of the
+        # fast-read stall draws below — and a stalled stream degrades its
+        # chunk to the synchronous path (never a wrong answer)
+        pplan = None
+        if engine.prefetch is not None:
+            pplan = engine.prefetch.plan(
+                pend.chunks, chips=chips,
+                stalled=lambda cid: self.injector.stalled(
+                    pend.qid, cid, self.PREFETCH_ATTEMPT))
+            engine.prefetch.begin(pplan, pend.chunks)
         # 3. execute — verify-on-read + repair (store tables) or shard
         #    failover (sharded tables); typed errors, never silent
         aggs = None
@@ -163,10 +181,24 @@ class ChaosHarness:
                 self._recovered(rs)
                 self.repairs += len(self.guard.repaired) - repaired_n0
         # 4. nominal access: charged once whether or not the query
-        #    degraded — the bytes streamed up to the failure either way
+        #    degraded — the bytes streamed up to the failure either way;
+        #    with a prefetch pipeline the busy time is the pipelined
+        #    (stall-degraded) service, the byte charge is unchanged
         acc = pe.on_access(pend.chunks, qid=pend.qid, tenant=pend.tenant)
-        busy = pe.service_s(acc, chips)
+        busy = pplan.service_s if pplan is not None \
+            else pe.service_s(acc, chips)
         pe.meter.charge_compute(acc.charge, busy, chips)
+        query_j_extra = 0.0
+        if pplan is not None:
+            # overlap's own traffic on the kind="prefetch" line; the
+            # *stalled* streams' wasted bytes instead join this query's
+            # single kind="recovery" line below — charged exactly once
+            self.prefetch_stalls += pplan.n_stalled
+            extra_cap_b += pplan.stalled_bytes
+            line = engine.prefetch.finish(pplan, qid=pend.qid,
+                                          tenant=pend.tenant)
+            if line is not None:
+                query_j_extra += line.total_j
         # 5. stall / retry / failover on each fast-tier chunk read
         saw_stall = False
         for cid in sorted(fast_cids):
@@ -185,7 +217,7 @@ class ChaosHarness:
                                       qid=pend.qid, tenant=pend.tenant)
             recovery_j = line.total_j
         return (aggs, acc, busy + extra_s,
-                acc.charge.total_j + recovery_j, error)
+                acc.charge.total_j + query_j_extra + recovery_j, error)
 
     def _chunk_read(self, engine, qid: int, cid, nbytes: int, chips: int):
         """Model one fast-tier chunk read under the stall fault + retry
@@ -252,6 +284,7 @@ class ChaosHarness:
             "recover": self.recover,
             "retry": self.retry.as_dict() if self.retry else None,
             "stalls": self.stalls,
+            "prefetch_stalls": self.prefetch_stalls,
             "retries": self.retries,
             "failovers": self.failovers,
             "repairs": self.repairs,

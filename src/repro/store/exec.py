@@ -1,36 +1,42 @@
 """Query execution over an EncodedTable: scan the compressed bytes.
 
-Chunk-by-chunk routing (each chunk carries its own encoding and, for FOR,
-its own frame of reference):
+Default path (`batched=True`): every chunk of a column executes in ONE
+kernel launch per (column-group, encoding) instead of one per chunk.
 
-- the dominant single-predicate/single-aggregate query over an RLE chunk
-  of that same column takes the fused `scan_compressed` kernel — runs
-  stream, rows never materialize;
-- FOR and PLAIN chunks execute through the *existing* physical operators
-  at their payload width: a FOR plane is a plain BitWeaving plane in
-  delta space, so predicates are translated into that space
-  (`translate_plan`) and the same scan/aggregate/fused kernels run on the
-  compressed words — the fused same-width path engages automatically when
-  predicate and aggregate chunks share a delta width. Aggregates come
-  back in the delta domain and get an exact host-int base fix-up
-  (sum += base*count, min/max += base);
-- RLE chunks inside general plan shapes (AND/OR trees, cross-column
-  aggregates) are decoded to rows in-graph (gather + repack) — the one
-  documented case that materializes codes, off the dominant path.
+- RLE chunks of the dominant single-pred/single-agg-same-column query
+  batch through `scan_compressed.rle_scan_aggregate_batched` — all run
+  planes stacked, one grid, one (n_chunks, 5) partial plane;
+- everything else is *width-unified*: the chunks touched by a query are
+  grouped by W = max payload width of the involved columns, the narrower
+  side repacked to W host-side (a delta payload always fits a wider
+  field; the reverse never happens because W is the max), and then
+  - single-pred/single-agg groups take ONE batched fused launch
+    (`scan_aggregate_batched`) whose per-chunk translated constants ride
+    in as scalar-prefetched data (each FOR chunk subtracts its own base);
+  - And/Or trees and multi-aggregate queries take one batched mask per
+    leaf (`scan_filter_batched`) + one batched masked aggregate per
+    aggregate column — launches scale with plan size, not chunk count.
 
-Every path lands on the same empty-selection identity (count=0, sum=0,
-min=vmax, max=0 at the *logical* width), so results are bit-identical to
-the plain-format engine regardless of encoding mix.
+Per-chunk (1, 5) partial rows are sliced out host-side, finalized,
+base-fixed and accumulated exactly as the per-chunk loop
+(`batched=False`, kept as the parity oracle) — results are bit-identical
+to it and to the plain-format engine regardless of encoding mix, and
+every path lands on the same empty-selection identity (count=0, sum=0,
+min=vmax, max=0 at the *logical* width). `translate_plan` is memoized on
+the frame tuple, so N chunks sharing a frame translate once.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.aggregate import ops as agg_ops
+from repro.kernels.scan_aggregate import ops as fused_ops
 from repro.kernels.scan_compressed import ops as rle_ops
-from repro.kernels.scan_filter.ref import codes_per_word
+from repro.kernels.scan_filter import ops as scan_ops
+from repro.kernels.scan_filter.ref import codes_per_word, pack, pack_mask
 from repro.query import physical
 from repro.query.physical import ColumnSlice
 from repro.query.plan import And, Or, Plan, Pred, columns_of
@@ -145,24 +151,203 @@ def _accumulate(total: dict, part: dict) -> None:
     total["max"] = max(total["max"], part["max"])
 
 
-def execute_encoded(plan: Plan, aggregates, table: EncodedTable,
-                    mode=None, guard=None) -> dict:
-    """Run a bound plan over the compressed chunks -> exact host-int
-    aggregates, bit-identical to the plain-format engine.
+def _translate_cached(plan: Plan, frames: dict, cache: dict) -> Plan:
+    """Memoized translate_plan: chunks sharing an identical
+    (base, width) frame map translate once per query."""
+    key = tuple(sorted(frames.items()))
+    tp = cache.get(key)
+    if tp is None:
+        tp = cache[key] = translate_plan(plan, frames)
+    return tp
 
-    `guard` (a resilience.ChunkGuard) makes every chunk read verify its
-    checksum first: a corrupt chunk is quarantined and repaired from the
-    oracle before its bytes reach a kernel, or the query dies with a
-    typed ChunkCorruptionError — corrupt payloads never aggregate.
-    """
-    aggregates = tuple(aggregates)
+
+@dataclass(frozen=True)
+class _BoundGroup:
+    """All of one column's chunks in a width group, bound for one batched
+    launch: stacked packed planes at the group width W plus per-chunk
+    frame bases (0 for decoded-RLE and plain chunks)."""
+    words: jnp.ndarray          # (n_chunks, n_words) uint32 at width W
+    valid: jnp.ndarray          # (n_chunks, n_words) packed validity
+    bases: tuple
+
+
+def _bind_group(col, cids, W: int) -> _BoundGroup:
+    """Bind chunks `cids` of a column at the unified width W.
+
+    A chunk narrower than W (smaller FOR delta width, or RLE decoded to
+    logical codes) repacks host-side — always exact, since W is the max
+    width in the group and payloads only ever widen. Ragged chunks pad to
+    the widest with zero words whose validity bits are 0."""
+    words_np, bases = [], []
+    for ci in cids:
+        ch = col.chunks[ci]
+        if ch.encoding is Encoding.RLE:
+            words_np.append(pack(ch.decode(), W))
+            bases.append(0)
+        elif ch.width == W:
+            words_np.append(np.asarray(ch.words, np.uint32))
+            bases.append(ch.base)
+        else:
+            delta = (ch.decode().astype(np.int64) - ch.base).astype(
+                np.uint32)
+            words_np.append(pack(delta, W))
+            bases.append(ch.base)
+    cpw = codes_per_word(W)
+    nw = max(w.size for w in words_np)
+    words3 = np.zeros((len(cids), nw), np.uint32)
+    valid3 = np.zeros((len(cids), nw), np.uint32)
+    rows_idx = np.arange(nw * cpw)
+    for k, (ci, w) in enumerate(zip(cids, words_np)):
+        words3[k, :w.size] = w
+        valid3[k] = pack_mask(rows_idx < col.chunks[ci].n_rows, W)[:nw]
+    return _BoundGroup(jnp.asarray(words3), jnp.asarray(valid3),
+                       tuple(bases))
+
+
+def _bind_group_cached(col, cids, W: int) -> _BoundGroup:
+    """Bound planes are query-independent, so they cache on the column,
+    keyed by (W, cids) and validated by chunk object identity: chunk
+    payloads are immutable, and every mutation path (quarantine repair)
+    *replaces* the chunk object, which invalidates the entry here."""
+    cache = col.__dict__.setdefault("_bind_cache", {})
+    key = (W, tuple(cids))
+    hit = cache.get(key)
+    if hit is not None:
+        chunks_then, bg = hit
+        if all(col.chunks[ci] is ch for ci, ch in zip(key[1], chunks_then)):
+            return bg
+    bg = _bind_group(col, cids, W)
+    cache[key] = (tuple(col.chunks[ci] for ci in cids), bg)
+    return bg
+
+
+def _batched_mask(tplans, bound, W: int, mode):
+    """Packed selection masks for a width group, one batched dispatch per
+    plan *leaf* (the per-chunk translated plans share the tree structure;
+    only leaf constants differ). Mirrors physical.eval_mask: leaf mask
+    AND validity, And/Or combined wordwise."""
+    def rec(nodes):
+        n0 = nodes[0]
+        if isinstance(n0, Pred):
+            g = bound[n0.column]
+            triples = [scan_ops.canonical_pred(nd.op, nd.constant, W)
+                       for nd in nodes]
+            m = scan_ops.scan_filter_batched(g.words, triples, W,
+                                             mode=mode)
+            return m & g.valid
+        subs = [rec([nd.children[k] for nd in nodes])
+                for k in range(len(n0.children))]
+        combine = jnp.bitwise_and if isinstance(n0, And) else jnp.bitwise_or
+        acc = subs[0]
+        for s in subs[1:]:
+            acc = combine(acc, s)
+        return acc
+    return rec(tplans)
+
+
+def _row_dict(row) -> dict:
+    return {"sum_lo": row[0], "sum_hi": row[1], "count": row[2],
+            "min": row[3], "max": row[4]}
+
+
+def _chunk_payload_width(ch) -> int:
+    """Payload width a chunk contributes to its group's unified W: RLE
+    decodes to logical codes, FOR/plain scan at their stored width."""
+    return ch.code_bits if ch.encoding is Encoding.RLE else ch.width
+
+
+def _execute_batched(plan: Plan, aggregates, table: EncodedTable,
+                     mode) -> dict:
     names = sorted(columns_of(plan) | set(aggregates))
     out = {a: identity_ints(table.columns[a].code_bits)
            for a in aggregates}
     fused_rle = (isinstance(plan, Pred) and aggregates == (plan.column,))
+    fused = isinstance(plan, Pred) and len(aggregates) == 1
+
+    rle_cids: list[int] = []
+    groups: dict[int, list[int]] = {}
     for ci in range(table.n_chunks):
-        if guard is not None:
+        chunks = [table.columns[n].chunks[ci] for n in names]
+        if any(ch.n_rows == 0 for ch in chunks):
+            continue                  # a zero-row chunk is the identity
+        if fused_rle and chunks[0].encoding is Encoding.RLE:
+            rle_cids.append(ci)       # names == (plan.column,) here
+            continue
+        W = max(_chunk_payload_width(ch) for ch in chunks)
+        groups.setdefault(W, []).append(ci)
+
+    if rle_cids:                      # one launch for every RLE chunk
+        col = table.columns[plan.column]
+        planes = [(col.chunks[ci].values, col.chunks[ci].lengths)
+                  for ci in rle_cids]
+        res = np.asarray(rle_ops.rle_scan_aggregate_batched(
+            planes, plan.constant, plan.op, col.code_bits, mode=mode))
+        for k in range(len(rle_cids)):
+            _accumulate(out[plan.column],
+                        agg_ops.finalize(_row_dict(res[k])))
+
+    tcache: dict = {}
+    for W, cids in sorted(groups.items()):
+        bound = {n: _bind_group_cached(table.columns[n], cids, W)
+                 for n in names}
+        tplans = [_translate_cached(
+            plan, {n: (bound[n].bases[k], W) for n in names}, tcache)
+            for k in range(len(cids))]
+        if fused:
+            pcol, acol = plan.column, aggregates[0]
+            triples = [scan_ops.canonical_pred(tp.op, tp.constant, W)
+                       for tp in tplans]
+            res = np.asarray(fused_ops.scan_aggregate_batched(
+                bound[pcol].words, bound[acol].words, bound[pcol].valid,
+                triples, W, mode=mode))
+            for k in range(len(cids)):
+                part = fixup_base(agg_ops.finalize(_row_dict(res[k])),
+                                  bound[acol].bases[k],
+                                  table.columns[acol].code_bits)
+                _accumulate(out[acol], part)
+            continue
+        mask3 = _batched_mask(tplans, bound, W, mode)
+        for acol in aggregates:
+            g = bound[acol]
+            res = np.asarray(agg_ops.aggregate_batched(g.words, mask3, W,
+                                                       mode=mode))
+            for k in range(len(cids)):
+                part = fixup_base(agg_ops.finalize(_row_dict(res[k])),
+                                  g.bases[k],
+                                  table.columns[acol].code_bits)
+                _accumulate(out[acol], part)
+    return out
+
+
+def execute_encoded(plan: Plan, aggregates, table: EncodedTable,
+                    mode=None, guard=None, batched: bool = True) -> dict:
+    """Run a bound plan over the compressed chunks -> exact host-int
+    aggregates, bit-identical to the plain-format engine.
+
+    `batched=True` (default) collapses the per-chunk kernel loop into one
+    launch per (column group, encoding); `batched=False` keeps the
+    original chunk-at-a-time loop as the in-tree parity oracle.
+
+    `guard` (a resilience.ChunkGuard) makes every chunk read verify its
+    checksum first: a corrupt chunk is quarantined and repaired from the
+    oracle before its bytes reach a kernel, or the query dies with a
+    typed ChunkCorruptionError — corrupt payloads never aggregate. All
+    checks run before the first kernel launch, in (chunk, column) order,
+    so quarantine/repair order matches the per-chunk loop exactly.
+    """
+    aggregates = tuple(aggregates)
+    names = sorted(columns_of(plan) | set(aggregates))
+    if guard is not None:
+        for ci in range(table.n_chunks):
             guard.check([(n, ci) for n in names])
+    if batched:
+        return _execute_batched(plan, aggregates, table, mode)
+
+    out = {a: identity_ints(table.columns[a].code_bits)
+           for a in aggregates}
+    fused_rle = (isinstance(plan, Pred) and aggregates == (plan.column,))
+    tcache: dict = {}
+    for ci in range(table.n_chunks):
         chunks = {n: table.columns[n].chunks[ci] for n in names}
         if fused_rle and chunks[plan.column].encoding is Encoding.RLE:
             ch = chunks[plan.column]
@@ -174,7 +359,7 @@ def execute_encoded(plan: Plan, aggregates, table: EncodedTable,
         bound = {n: _bind_chunk(table.columns[n], ci) for n in names}
         frames = {n: (b.base, b.slice.code_bits)
                   for n, b in bound.items()}
-        tplan = translate_plan(plan, frames)
+        tplan = _translate_cached(plan, frames, tcache)
         raw = physical.execute(tplan, aggregates,
                                {n: b.slice for n, b in bound.items()},
                                mode=mode)

@@ -15,6 +15,7 @@ answers stay bit-exact, latency is charged per chunk at each tier's rate,
 and admission feasibility uses the blended rate.
 """
 from repro.tier.placement import Access, PlacementEngine, Policy
+from repro.tier.prefetch import PrefetchPipeline, PrefetchPlan
 from repro.tier.tiers import (TieredBudget, TierPair, TierSpec,
                               measured_fast_gbps, paper_tiers,
                               table1_bandwidth_ratio, tier_from_system)
@@ -23,6 +24,7 @@ from repro.tier.trace import (TracedQuery, TraceSpec, make_trace,
 
 __all__ = [
     "Access", "PlacementEngine", "Policy",
+    "PrefetchPipeline", "PrefetchPlan",
     "TierSpec", "TierPair", "TieredBudget", "paper_tiers",
     "tier_from_system", "table1_bandwidth_ratio", "measured_fast_gbps",
     "TraceSpec", "TracedQuery", "make_trace", "replay_trace",

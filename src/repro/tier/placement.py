@@ -97,6 +97,15 @@ class PlacementEngine:
         self.recovery_bytes_total = 0
         self.hits_total = 0
         self.misses_total = 0
+        # async prefetch (repro.tier.prefetch): chunks currently streaming
+        # capacity -> fast staging buffer, so admission projections count
+        # them as fast instead of double-counting a second capacity read;
+        # byte counters stay OUT of fast/capacity_bytes_total — hit_rate
+        # measures demand traffic, the prefetch ledger measures overlap
+        self.inflight: dict[tuple[str, int], int] = {}
+        self.prefetch_reserved_bytes = 0
+        self.prefetch_streamed_bytes_total = 0
+        self.prefetch_wasted_bytes_total = 0
         # circuit-breaker demotion (repro.resilience): while True, every
         # access is *charged* at the capacity tier — the fast copy is not
         # trusted for service — but placement state (residency, LRU
@@ -210,6 +219,10 @@ class PlacementEngine:
             "demoted": self.demoted,
             "energy_j": self.energy_j_total,
             "blended_gbps": self.blended_measured_bps(chips) / 1e9,
+            "prefetch_reserved_bytes": int(self.prefetch_reserved_bytes),
+            "prefetch_streamed_bytes":
+                int(self.prefetch_streamed_bytes_total),
+            "prefetch_wasted_bytes": int(self.prefetch_wasted_bytes_total),
         }
 
     # --- admission-time projection ----------------------------------------
@@ -225,7 +238,11 @@ class PlacementEngine:
                     f"unknown chunk {cid!r}; placement was built with "
                     f"chunk_rows={self.chunk_rows} over "
                     f"{sorted({c for c, _ in self.ids})}")
-            if self.in_fast[i] and not self.demoted:
+            if (self.in_fast[i] and not self.demoted) \
+                    or cid in self.inflight:
+                # a chunk already streaming up through the prefetch buffer
+                # is charged as fast at admission: its capacity read is in
+                # flight and must not be projected (= charged) twice
                 acc.fast_bytes += b
                 acc.n_hit += 1
             else:
@@ -297,6 +314,52 @@ class PlacementEngine:
         self.recovery_bytes_total += fast_bytes + capacity_bytes
         return self.meter.charge(fast_bytes, capacity_bytes, qid=qid,
                                  tenant=tenant, kind="recovery")
+
+    # --- async prefetch accounting (repro.tier.prefetch) ------------------
+    def reserve_prefetch(self, nbytes: int) -> int:
+        """Carve a staging buffer for the prefetch pipeline out of the
+        fast-tier budget (evicting LRU residents if the tier is full —
+        the buffer is real fast-tier capacity, not free space). Returns
+        the bytes reserved; raises if the request exceeds the tier."""
+        nbytes = int(nbytes)
+        if nbytes <= 0:
+            raise ValueError(f"prefetch reservation must be > 0, "
+                             f"got {nbytes}")
+        if nbytes > int(self.budget.fast_capacity):
+            raise ValueError(
+                f"prefetch reservation {nbytes} exceeds fast tier "
+                f"capacity {int(self.budget.fast_capacity)}")
+        need = nbytes - int(self.budget.remaining)
+        if need > 0:
+            self._evict_lru(need)
+        self.budget.alloc(nbytes)
+        self.prefetch_reserved_bytes += nbytes
+        return nbytes
+
+    def release_prefetch(self, nbytes: int) -> None:
+        """Return a prefetch reservation to the budget."""
+        nbytes = min(int(nbytes), self.prefetch_reserved_bytes)
+        self.budget.free(nbytes)
+        self.prefetch_reserved_bytes -= nbytes
+
+    def charge_prefetch(self, fast_bytes: int, capacity_bytes: int, *,
+                        qid: int | None = None, tenant: int | None = None):
+        """Charge prefetch overlap traffic on its own ledger line:
+        `fast_bytes` = staged chunks re-read from the fast buffer by the
+        scan (the nominal access already charged their capacity stream),
+        `capacity_bytes` = streamed-then-cancelled waste. Distinguishable
+        from demand traffic (kind="prefetch") and excluded from hit-rate
+        totals; returns the meter line, or None for a zero charge."""
+        fast_bytes, capacity_bytes = int(fast_bytes), int(capacity_bytes)
+        if fast_bytes < 0 or capacity_bytes < 0:
+            raise ValueError(f"prefetch bytes must be >= 0, got "
+                             f"({fast_bytes}, {capacity_bytes})")
+        if fast_bytes == 0 and capacity_bytes == 0:
+            return None
+        self.prefetch_streamed_bytes_total += fast_bytes
+        self.prefetch_wasted_bytes_total += capacity_bytes
+        return self.meter.charge(fast_bytes, capacity_bytes, qid=qid,
+                                 tenant=tenant, kind="prefetch")
 
     # --- CACHE: LRU promotion/eviction ------------------------------------
     def _evict_lru(self, need: int, floor_freq: int | None = None) -> bool:

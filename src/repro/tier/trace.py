@@ -106,7 +106,7 @@ def make_trace(table, spec: TraceSpec = TraceSpec()) -> list[TracedQuery]:
 def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
                  chunk_rows: int = 1024, warmup_fraction: float = 1 / 3,
                  mode: str = "xla_ref", compute_w: float = 0.0,
-                 power_cap=None, chaos=None):
+                 power_cap=None, chaos=None, prefetch_bytes: int = 0):
     """Closed-loop replay of a trace against a tiered QueryEngine — the
     one attainment methodology shared by benchmarks/tier_bench.py,
     examples/tiered_store.py, and tests.
@@ -129,18 +129,27 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
     injected faults: recovery extras stretch service on the same clock
     and typed-degraded answers count as misses — the attainment returned
     is the *fault-adjusted* number BENCH_resilience plots.
+
+    `prefetch_bytes` > 0 attaches a repro.tier.PrefetchPipeline with that
+    in-flight staging budget (carved out of the fast tier): misses
+    overlap with scans, service per stage is max(scan, stream) instead of
+    the sum, and in-flight chunks are counted as fast by admission
+    projections (never double-charged). Reach it as `eng.prefetch`.
     """
     from repro.energy.meter import EnergyMeter
     from repro.query import QueryEngine
     from repro.serve.sla import VirtualClock
     from repro.tier.placement import PlacementEngine
+    from repro.tier.prefetch import PrefetchPipeline
 
     pe = PlacementEngine.for_table(table, tiers, policy,
                                    chunk_rows=chunk_rows,
                                    meter=EnergyMeter(tiers, compute_w))
+    pf = (PrefetchPipeline(pe, prefetch_bytes) if prefetch_bytes > 0
+          else None)
     clk = VirtualClock()
     eng = QueryEngine(table, mode=mode, tiered=pe, clock=clk,
-                      power_cap=power_cap, chaos=chaos)
+                      power_cap=power_cap, chaos=chaos, prefetch=pf)
     warmup = int(len(trace) * warmup_fraction) if sla_s is not None else \
         len(trace)
     met = offered = 0

@@ -290,3 +290,193 @@ def test_moe_dispatch_conservation(seed, s, e, k):
                 assert ei in idx_np[tok], "token routed to unchosen expert"
                 per_token[tok] += wgt
     assert (per_token <= 1.0 + 1e-5).all()
+
+
+# --------------------------------------------------------------------------
+# batched multi-chunk execution invariants (repro.store.exec batched=True)
+# --------------------------------------------------------------------------
+from repro.db.columnar import BitPackedColumn, Table
+from repro.query.plan import And, Or, Pred
+from repro.store import EncodedTable
+from repro.store.exec import execute_encoded
+
+
+def _random_store(seed: int, n_chunks: int, chunk_rows: int = 64):
+    """A mixed-encoding table whose chunking has a ragged tail: sorted
+    low-cardinality (RLE), clustered narrow (FOR), uniform (plain), and a
+    wide 16-bit clustered column — every batched width-unification group
+    in one table."""
+    rng = np.random.default_rng(seed)
+    n = int(n_chunks * chunk_rows - rng.integers(0, chunk_rows))
+    n = max(n, 1)
+    raw = {"r": np.sort(rng.integers(0, 6, n)),
+           "f": 40 + rng.integers(0, 8, n),
+           "u": rng.integers(0, 128, n),
+           "w": 9000 + rng.integers(0, 100, n)}
+    bits = {"r": 8, "f": 8, "u": 8, "w": 16}
+    t = Table("p")
+    for name, v in raw.items():
+        t.add(BitPackedColumn.from_values(name, v, bits[name]))
+    return raw, bits, EncodedTable.from_table(t, chunk_rows=chunk_rows)
+
+
+_NP_OPS = {"lt": np.less, "le": np.less_equal, "gt": np.greater,
+           "ge": np.greater_equal, "eq": np.equal, "ne": np.not_equal}
+
+
+def _np_mask(plan, cols):
+    if isinstance(plan, Pred):
+        return _NP_OPS[plan.op](cols[plan.column], plan.constant)
+    masks = [_np_mask(c, cols) for c in plan.children]
+    out = masks[0]
+    for m in masks[1:]:
+        out = (out & m) if isinstance(plan, And) else (out | m)
+    return out
+
+
+def _np_aggs(plan, aggregates, raw, bits):
+    cols = {n: np.asarray(v, np.int64) for n, v in raw.items()}
+    sel = _np_mask(plan, cols)
+    out = {}
+    for a in aggregates:
+        v = cols[a][sel]
+        vmax = (1 << (bits[a] - 1)) - 1
+        out[a] = ({"sum": int(v.sum()), "count": int(v.size),
+                   "min": int(v.min()), "max": int(v.max())} if v.size
+                  else {"sum": 0, "count": 0, "min": vmax, "max": 0})
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_chunks=st.integers(1, 17),
+       shape=st.integers(0, 4))
+def test_batched_exec_bit_exact_vs_per_chunk_and_numpy(seed, n_chunks,
+                                                       shape):
+    """One batched launch per (column-group, encoding) must be
+    bit-identical to the per-chunk loop AND to a numpy oracle over the
+    raw values — for every plan shape (fused RLE single-pred,
+    cross-column, conjunction, disjunction, empty selection), any chunk
+    count 1..17 with a ragged tail, on both kernel backends."""
+    rng = np.random.default_rng(seed)
+    raw, bits, enc = _random_store(seed, n_chunks)
+    plan, aggs = [
+        (Pred("r", "lt", 3), ("r",)),                 # fused RLE path
+        (Pred("f", "ge", int(rng.integers(40, 48))), ("u", "w")),
+        (And((Pred("u", "lt", 90), Pred("w", "ge", 9020))), ("f",)),
+        (Or((Pred("r", "eq", 2), Pred("f", "gt", 44))), ("w", "r")),
+        (Pred("u", "gt", 127), ("u",)),               # empty selection
+    ][shape]
+    want = _np_aggs(plan, aggs, raw, bits)
+    for mode in ("xla_ref", "pallas"):
+        batched = execute_encoded(plan, aggs, enc, mode=mode, batched=True)
+        loop = execute_encoded(plan, aggs, enc, mode=mode, batched=False)
+        assert batched == loop == want, (mode, plan)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_chunks=st.integers(1, 6))
+def test_batched_all_chunks_quarantined_degrades_identically(seed,
+                                                             n_chunks):
+    """With every chunk of a column corrupted: repair-on guard feeds both
+    paths repaired bytes (answers exact), repair-off raises the same
+    typed error from both — the batched path never aggregates corrupt
+    payloads and never diverges from the per-chunk loop."""
+    from repro.resilience.recover import ChunkCorruptionError, ChunkGuard
+
+    raw, bits, enc = _random_store(seed, n_chunks)
+    guard = ChunkGuard(enc)
+    col = enc.columns["u"]
+    rng = np.random.default_rng(seed)
+    for ch in col.chunks:                 # corrupt every chunk's payload
+        if ch.words.size:
+            w = np.asarray(ch.words).copy()
+            w[rng.integers(w.size)] ^= np.uint32(1 << rng.integers(8))
+            ch.words = w
+    plan, aggs = Pred("u", "lt", 100), ("u",)
+    want = _np_aggs(plan, aggs, raw, bits)
+
+    guard.repair = True
+    got_b = execute_encoded(plan, aggs, enc, mode="xla_ref", guard=guard,
+                            batched=True)
+    assert got_b == want
+    assert len(guard.repaired) >= sum(ch.n_rows > 0 for ch in col.chunks)
+
+    # re-corrupt, repair off: both paths die typed, neither answers
+    _, _, enc2 = _random_store(seed, n_chunks)
+    guard2 = ChunkGuard(enc2)
+    guard2.repair = False
+    col2 = enc2.columns["u"]
+    rng = np.random.default_rng(seed)
+    for ch in col2.chunks:
+        if ch.words.size:
+            w = np.asarray(ch.words).copy()
+            w[rng.integers(w.size)] ^= np.uint32(1 << rng.integers(8))
+            ch.words = w
+    for batched in (True, False):
+        with pytest.raises(ChunkCorruptionError):
+            execute_encoded(plan, aggs, enc2, mode="xla_ref",
+                            guard=guard2, batched=batched)
+
+
+# --------------------------------------------------------------------------
+# async prefetch invariants (repro.tier.prefetch)
+# --------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       policy_i=st.integers(0, 2),
+       buf_frac=st.floats(0.02, 0.4),
+       stall=st.floats(0.0, 0.5))
+def test_prefetch_never_worse_never_wrong_never_double_charged(
+        seed, policy_i, buf_frac, stall):
+    """Under any policy, staging budget, and seeded stream-stall rate:
+    (a) answers are bit-identical with and without the pipeline, (b) a
+    fault-free pipelined replay is never slower than sync, (c) prefetch
+    bytes live only on kind="prefetch"/"recovery" lines — demand totals
+    (and so hit_rate) are untouched — and (d) the staging reservation
+    never exceeds the fast tier."""
+    from repro.db import Table as DbTable
+    from repro.resilience import ChaosHarness, FaultSpec, RetryPolicy
+    from repro.tier import (Policy, TraceSpec, make_trace, paper_tiers,
+                            replay_trace)
+
+    policy = list(Policy)[policy_i]
+    tbl = DbTable.synthetic("t", 2048,
+                            {f"c{i:02d}": 8 for i in range(8)}, seed=seed)
+    tiers = paper_tiers(tbl.nbytes * 0.3, fast_gbps=10.0)
+    trace = make_trace(tbl, TraceSpec(n_queries=30, seed=seed))
+    buf = max(1, int(tiers.fast.capacity * buf_frac))
+
+    def run(pf_bytes, chaos=None):
+        return replay_trace(tbl, trace, tiers, policy, chunk_rows=256,
+                            chaos=chaos, prefetch_bytes=pf_bytes)
+
+    pe0, eng0, _ = run(0)
+    pe1, eng1, _ = run(buf)
+    for r0, r1 in zip(eng0.results, eng1.results):
+        assert r0.aggregates == r1.aggregates
+    assert eng1.seconds_total <= eng0.seconds_total + 1e-12
+    assert pe1.prefetch_reserved_bytes <= tiers.fast.capacity
+    # demand (hit-rate) totals exclude prefetch traffic entirely
+    assert (pe1.fast_bytes_total + pe1.capacity_bytes_total
+            == pe0.fast_bytes_total + pe0.capacity_bytes_total)
+    pf_lines = [c for c in pe1.meter.charges if c.kind == "prefetch"]
+    assert pe1.prefetch_streamed_bytes_total == sum(
+        c.fast_bytes for c in pf_lines)
+    assert pe1.prefetch_wasted_bytes_total == sum(
+        c.capacity_bytes for c in pf_lines)
+    assert pe1.meter.prefetch_j == sum(c.total_j for c in pf_lines)
+
+    if stall > 0:
+        from collections import Counter
+        chaos = ChaosHarness(FaultSpec(seed=seed, stall_rate=stall),
+                             retry=RetryPolicy(timeout_s=1e-6,
+                                               max_retries=1))
+        pe2, eng2, _ = run(buf, chaos=chaos)
+        for r0, r2 in zip(eng0.results, eng2.results):
+            assert r0.aggregates == r2.aggregates    # stalls never wrong
+        recovery = [c for c in pe2.meter.charges if c.kind == "recovery"]
+        assert all(n <= 1 for n in
+                   Counter(c.qid for c in recovery).values())
+        # stalled-stream waste is on the recovery/prefetch ledgers only
+        assert pe2.recovery_bytes_total == sum(
+            c.fast_bytes + c.capacity_bytes for c in recovery)

@@ -338,3 +338,80 @@ class TestTornFiles:
         FaultInjector(FaultSpec(seed=8)).tear_file(p1)
         FaultInjector(FaultSpec(seed=8)).tear_file(p2 / "x.json")
         assert p1.read_bytes() == (p2 / "x.json").read_bytes()
+
+
+class TestPrefetchUnderChaos:
+    """The async prefetch pipeline under injected faults: a stalled
+    capacity->fast stream degrades its chunk to the synchronous read —
+    never a wrong answer — its wasted bytes land on the query's single
+    kind="recovery" line, and a seeded chaos+prefetch replay is
+    bit-deterministic."""
+
+    def _run(self, table, spec, prefetch_bytes, seed_queries=8):
+        from repro.tier.prefetch import PrefetchPipeline
+
+        clock = VirtualClock()
+        pe = PlacementEngine.for_table(
+            table, paper_tiers(max(1, int(table.nbytes * 0.4))),
+            Policy.CACHE, chunk_rows=2048)
+        pf = (PrefetchPipeline(pe, prefetch_bytes) if prefetch_bytes
+              else None)
+        chaos = ChaosHarness(spec,
+                             retry=RetryPolicy(timeout_s=1e-6,
+                                               max_retries=1))
+        eng = QueryEngine(table, clock=clock, tiered=pe, chaos=chaos,
+                          prefetch=pf)
+        q = Query(Pred("a", "lt", 64), aggregates=("b",))
+        out = run_n(eng, clock, q, seed_queries)
+        return pe, eng, chaos, out
+
+    def test_stalled_streams_never_wrong_and_charge_once(self, table):
+        from collections import Counter
+
+        spec = FaultSpec(seed=11, stall_rate=0.5)
+        pe0, _, _, clean = self._run(table, FaultSpec(seed=11), 0)
+        buf = max(1, int(table.nbytes * 0.25))
+        pe1, eng1, chaos, faulted = self._run(table, spec, buf)
+        for r0, r1 in zip(clean, faulted):
+            assert r1.aggregates == r0.aggregates     # stall != wrong
+        assert chaos.prefetch_stalls > 0              # faults actually hit
+        recovery = [c for c in pe1.meter.charges if c.kind == "recovery"]
+        assert all(n <= 1 for n in
+                   Counter(c.qid for c in recovery).values())
+        assert pe1.recovery_bytes_total == sum(
+            c.fast_bytes + c.capacity_bytes for c in recovery)
+        # stalled streams' waste reached the recovery ledger
+        assert sum(c.capacity_bytes for c in recovery) > 0
+        assert eng1.prefetch.stats()["stalled_chunks"] == \
+            chaos.prefetch_stalls
+
+    def test_chaos_prefetch_replay_is_deterministic(self, table):
+        spec = FaultSpec(seed=5, stall_rate=0.3)
+        buf = max(1, int(table.nbytes * 0.25))
+        pe_a, eng_a, _, out_a = self._run(table, spec, buf)
+        pe_b, eng_b, _, out_b = self._run(table, spec, buf)
+        assert [r.aggregates for r in out_a] == \
+            [r.aggregates for r in out_b]
+        assert [r.latency_s for r in out_a] == \
+            [r.latency_s for r in out_b]
+        assert eng_a.prefetch.stats() == eng_b.prefetch.stats()
+        assert pe_a.meter.summary() == pe_b.meter.summary()
+
+    def test_prefetch_under_breaker_demotion_stages_nothing(self, table):
+        from repro.tier.prefetch import PrefetchPipeline
+
+        clock = VirtualClock()
+        pe = PlacementEngine.for_table(
+            table, paper_tiers(max(1, int(table.nbytes * 0.4))),
+            Policy.CACHE, chunk_rows=2048)
+        pf = PrefetchPipeline(pe, max(1, int(table.nbytes * 0.25)))
+        # a breaker tripped open with an effectively infinite cooldown
+        breaker = CircuitBreaker(fail_threshold=1, cooldown_s=1e9)
+        breaker.record_fault(0.0)
+        chaos = ChaosHarness(FaultSpec(seed=0), breaker=breaker)
+        eng = QueryEngine(table, clock=clock, tiered=pe, chaos=chaos,
+                          prefetch=pf)
+        q = Query(Pred("a", "lt", 64), aggregates=("b",))
+        run_n(eng, clock, q, 3)
+        assert pe.demoted
+        assert eng.prefetch.stats()["staged_chunks"] == 0

@@ -506,3 +506,67 @@ class TestValidationMessages:
             scan_ops.scan_filter(packed, 1, "like", 8)
         with pytest.raises(ValueError, match="unknown predicate op"):
             scan_ref.scan_ref(packed, 1, "like", 8)
+
+
+class TestBatchedLaunches:
+    """The tentpole's observable: all same-encoding chunks of a column
+    group execute as ONE kernel launch, counted in kernels.dispatch."""
+
+    def test_one_launch_per_group_not_per_chunk(self, encoded):
+        from repro.kernels import dispatch
+
+        plan, aggs = Pred("f", "ge", 42), ("u",)
+        dispatch.reset_launch_counts()
+        execute_encoded(plan, aggs, encoded, mode="xla_ref", batched=False)
+        per_chunk = dispatch.total_launches()
+        dispatch.reset_launch_counts()
+        execute_encoded(plan, aggs, encoded, mode="xla_ref", batched=True)
+        batched = dispatch.total_launches()
+        assert per_chunk >= encoded.n_chunks       # the old loop: >= 1/chunk
+        assert batched < encoded.n_chunks          # batched: 1 per group
+        # fused single-pred/single-agg over one width group -> exactly 1
+        assert dispatch.launch_counts().get("scan_aggregate") == 1
+
+    def test_rle_chunks_batch_into_one_launch(self, encoded):
+        from repro.kernels import dispatch
+
+        dispatch.reset_launch_counts()
+        execute_encoded(Pred("r", "lt", 3), ("r",), encoded,
+                        mode="xla_ref", batched=True)
+        assert dispatch.launch_counts().get("scan_compressed") == 1
+        dispatch.reset_launch_counts()
+        execute_encoded(Pred("r", "lt", 3), ("r",), encoded,
+                        mode="xla_ref", batched=False)
+        assert dispatch.launch_counts().get("scan_compressed") == \
+            encoded.n_chunks
+
+    @pytest.mark.parametrize("batched", (True, False))
+    def test_translate_plan_memoized_on_frame_tuple(self, monkeypatch,
+                                                    batched):
+        """Chunks sharing a (base, width) frame translate the plan once
+        per execute call, not once per chunk — the satellite regression:
+        a plain column's frames are identical across chunks, so N chunks
+        must cost exactly one translation."""
+        import repro.store.exec as X
+
+        rng = np.random.default_rng(0)
+        t = Table("m")
+        t.add(BitPackedColumn.from_values("a", rng.integers(0, 128, 4096),
+                                          8))
+        t.add(BitPackedColumn.from_values("b", rng.integers(0, 128, 4096),
+                                          8))
+        enc = EncodedTable.from_table(
+            t, chunk_rows=512,
+            encodings={"a": Encoding.PLAIN, "b": Encoding.PLAIN})
+        assert enc.n_chunks == 8
+        calls = []
+        real = X.translate_plan
+        monkeypatch.setattr(X, "translate_plan",
+                            lambda plan, frames: calls.append(1) or
+                            real(plan, frames))
+        got = execute_encoded(Pred("a", "lt", 64), ("b",), enc,
+                              mode="xla_ref", batched=batched)
+        assert len(calls) == 1            # 8 chunks, 1 shared frame
+        want = execute_encoded(Pred("a", "lt", 64), ("b",), enc,
+                               mode="xla_ref", batched=batched)
+        assert got == want

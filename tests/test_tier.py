@@ -436,3 +436,158 @@ def test_tier_bench_appends_record(tmp_path, monkeypatch, capsys):
         for skew_row in pol.values():
             assert 0.0 <= skew_row["hit_rate"] <= 1.0
             assert math.isfinite(skew_row["blended_gbps"])
+
+
+class TestPrefetch:
+    """PrefetchPipeline: overlap = max per stage (not sum), bounded
+    staging budget, in-flight chunks never double-projected, stall ->
+    synchronous degradation. Hand-computed against paper_tiers at
+    fast=10 GB/s, capacity=4 GB/s (the 2.5x Table-1 ratio)."""
+
+    B = 1000                           # bytes per chunk
+    FAST = 10e9
+    CAP = 4e9
+
+    def _pe(self, policy=Policy.STATIC, fast_capacity=2000, pin=(0,)):
+        from repro.tier import PlacementEngine
+        ids = [("c", 0), ("c", 1), ("c", 2)]
+        return PlacementEngine(ids, [self.B] * 3,
+                               paper_tiers(fast_capacity, fast_gbps=10.0),
+                               policy, chunk_rows=256,
+                               pin_order=list(pin))
+
+    def test_service_is_max_per_stage_not_sum(self):
+        from repro.tier import PrefetchPipeline
+        pe = self._pe()                # only chunk 0 pinned fast
+        pf = PrefetchPipeline(pe, self.B)
+        chunks = {("c", 0): self.B, ("c", 1): self.B, ("c", 2): self.B}
+        plan = pf.plan(chunks)
+        # hit c0 scans 1e-7; first miss c1 reads sync 2.5e-7 (fill);
+        # c2 streams under c1's scan: service = 1e-7 + max(2.5e-7,
+        # 2.5e-7) + 1e-7 = 4.5e-7, vs sync 1e-7 + 5e-7 = 6e-7
+        assert plan.sync_service_s == pytest.approx(6.0e-7)
+        assert plan.service_s == pytest.approx(4.5e-7)
+        assert plan.used and plan.staged_bytes == self.B
+        assert plan.staged_cids == (("c", 2),)
+        pf.close()
+
+    def test_pipelined_never_worse_and_identical_placement(self):
+        from repro.tier import PrefetchPipeline
+        pe = self._pe()
+        pf = PrefetchPipeline(pe, self.B)
+        chunks = {("c", 0): self.B, ("c", 1): self.B, ("c", 2): self.B}
+        plan = pf.plan(chunks)
+        assert plan.service_s <= plan.sync_service_s
+        before = pe.in_fast.copy()
+        acc = pe.on_access(chunks, qid=1, tenant=0)       # unchanged path
+        assert (pe.in_fast == before).all()               # STATIC anyway
+        # the nominal charge is untouched by the pipeline
+        assert acc.fast_bytes == self.B
+        assert acc.capacity_bytes == 2 * self.B
+        line = pf.finish(plan, qid=1, tenant=0)
+        assert line.kind == "prefetch"
+        assert line.fast_bytes == self.B and line.capacity_bytes == 0
+        assert pe.meter.prefetch_j == line.total_j
+        # prefetch traffic never pollutes the demand (hit-rate) totals
+        assert pe.fast_bytes_total == self.B
+        assert pe.capacity_bytes_total == 2 * self.B
+        pf.close()
+
+    def test_inflight_projects_as_fast_exactly_once(self):
+        from repro.tier import PrefetchPipeline
+        pe = self._pe()
+        pf = PrefetchPipeline(pe, self.B)
+        chunks = {("c", 0): self.B, ("c", 1): self.B, ("c", 2): self.B}
+        plan = pf.plan(chunks)
+        assert pe.project(chunks).fast_bytes == self.B
+        pf.begin(plan, chunks)
+        # c2 is streaming: admission now projects it fast, not a second
+        # capacity read
+        assert pe.project(chunks).fast_bytes == 2 * self.B
+        pf.finish(plan)
+        assert pe.project(chunks).fast_bytes == self.B
+        pf.close()
+
+    def test_chunk_larger_than_buffer_never_staged(self):
+        from repro.tier import PrefetchPipeline
+        pe = self._pe()
+        pf = PrefetchPipeline(pe, self.B // 2)
+        plan = pf.plan({("c", 0): self.B, ("c", 1): self.B,
+                        ("c", 2): self.B})
+        assert not plan.used
+        assert plan.service_s == pytest.approx(plan.sync_service_s)
+        pf.close()
+
+    def test_memcache_first_touch_not_staged(self):
+        from repro.tier import PrefetchPipeline
+        pe = self._pe(policy=Policy.MEMCACHE, pin=())
+        pf = PrefetchPipeline(pe, self.B)
+        chunks = {("c", 0): self.B, ("c", 1): self.B, ("c", 2): self.B}
+        assert not pf.plan(chunks).used    # no frequency evidence yet
+        pe.on_access(chunks)               # first touch builds evidence
+        pe.demoted = False
+        plan = pf.plan(chunks)
+        assert plan.used                   # admission bar now cleared
+        pf.close()
+
+    def test_demoted_fast_tier_stages_nothing(self):
+        from repro.tier import PrefetchPipeline
+        pe = self._pe()
+        pf = PrefetchPipeline(pe, self.B)
+        pe.demoted = True
+        chunks = {("c", 0): self.B, ("c", 1): self.B, ("c", 2): self.B}
+        plan = pf.plan(chunks)
+        assert not plan.used
+        # everything reads from the durable capacity tier
+        assert plan.sync_service_s == pytest.approx(3 * self.B / self.CAP)
+        assert plan.service_s == pytest.approx(plan.sync_service_s)
+        pf.close()
+
+    def test_stall_degrades_to_sync_and_reports_waste(self):
+        from repro.tier import PrefetchPipeline
+        pe = self._pe()
+        pf = PrefetchPipeline(pe, self.B)
+        chunks = {("c", 0): self.B, ("c", 1): self.B, ("c", 2): self.B}
+        plan = pf.plan(chunks, stalled=lambda cid: cid == ("c", 2))
+        # the stalled stream re-reads synchronously: overlap gone
+        assert plan.service_s == pytest.approx(plan.sync_service_s)
+        assert plan.stalled_bytes == self.B
+        assert plan.staged_bytes == 0      # nothing usefully streamed
+        line = pf.finish(plan, qid=9)
+        assert line is None                # stalled waste is the caller's
+        assert pf.stats()["stalled_chunks"] == 1
+        pf.close()
+
+    def test_reservation_bounded_and_restored(self):
+        from repro.tier import PrefetchPipeline
+        pe = self._pe()
+        with pytest.raises(ValueError, match="exceeds fast tier"):
+            PrefetchPipeline(pe, 10_000)
+        pf = PrefetchPipeline(pe, self.B)
+        assert pe.prefetch_reserved_bytes == self.B
+        assert pe.stats()["prefetch_reserved_bytes"] == self.B
+        pf.close()
+        assert pe.prefetch_reserved_bytes == 0
+
+    def test_reservation_evicts_lru_when_tier_full(self):
+        from repro.tier import PrefetchPipeline
+        pe = self._pe(policy=Policy.CACHE, fast_capacity=2000, pin=())
+        chunks = {("c", 0): self.B, ("c", 1): self.B}
+        pe.on_access(chunks)               # CACHE promotes both; tier full
+        assert pe.in_fast.sum() == 2
+        pf = PrefetchPipeline(pe, self.B)  # must evict the LRU resident
+        assert pe.in_fast.sum() == 1
+        assert int(pe.budget.remaining) == 0
+        pf.close()
+
+    def test_engine_requires_matching_placement(self):
+        from repro.query import QueryEngine
+        from repro.serve.sla import VirtualClock
+        from repro.tier import PrefetchPipeline
+        pe, other = self._pe(), self._pe()
+        pf = PrefetchPipeline(other, self.B)
+        with pytest.raises(ValueError, match="different PlacementEngine"):
+            QueryEngine(Table.synthetic("t", 256, {"a": 8, "b": 8},
+                                        seed=0),
+                        tiered=pe, clock=VirtualClock(), prefetch=pf)
+        pf.close()
