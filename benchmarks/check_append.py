@@ -42,8 +42,24 @@ def check_queries() -> str:
     hist, rec = _load("queries")
     assert rec["scan_agg_gbps"] > 0 and rec["n_shards"] >= 1, rec
     assert rec["sla_vs_load"], rec
+    g = rec["grouped"]
+    assert g["sharded_rows_per_s"] > 0 and g["sharded_groups"] > 0, g
+    cards = g["cardinality"]
+    assert len(cards) >= 3, cards
+    strategies = {c["strategy"] for c in cards.values()}
+    assert strategies == {"dense", "fallback"}, \
+        f"cardinality sweep should cross the dense cutoff: {cards}"
+    assert g["rle_pregrouped_us"] < g["hash_fallback_us"], \
+        (f"fused RLE run-accumulation did not beat the hash fallback on a "
+         f"sorted low-cardinality key: {g['rle_pregrouped_us']} vs "
+         f"{g['hash_fallback_us']} us")
+    assert g["rle_launches_per_query"] == 1, \
+        f"count-only RLE rollup should be ONE batched launch: {g}"
+    assert g["fallback_launches_during_rle"] == 0, \
+        f"RLE path fell back to the host sort/hash: {g}"
     return (f"{len(hist)} record(s), last: {rec['n_shards']} shards, "
-            f"{rec['scan_agg_gbps']} GB/s")
+            f"{rec['scan_agg_gbps']} GB/s, grouped rle "
+            f"{g['speedup']}x vs fallback")
 
 
 def check_tier() -> str:

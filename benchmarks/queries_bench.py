@@ -23,11 +23,14 @@ if "jax" not in sys.modules:          # must precede the first jax import
                           "--xla_force_host_platform_device_count=8")
 
 import jax
+import numpy as np
 
 from benchmarks.common import append_trajectory, timed
 from repro.db import Table
+from repro.db.columnar import BitPackedColumn
 from repro.launch.mesh import make_mesh
-from repro.query import Pred, Query, QueryEngine, ShardedTable
+from repro.query import GroupBy, Pred, Query, QueryEngine, ShardedTable
+from repro.query import relational
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_queries.json"
 
@@ -52,6 +55,84 @@ def _attainment_vs_load(st, measured_gbps: float, loads=(0.5, 1.0, 2.0),
                      "served": s["served"], "rejected": s["rejected"],
                      "latency_p99_s": s["latency_p99_s"]}
     return out
+
+
+def _grouped_cardinality_sweep(cards=(8, 256, 32768)) -> dict:
+    """Grouped-aggregation throughput vs key cardinality on one device:
+    low cardinalities run the dense accumulator-plane kernel, anything
+    past DENSE_MAX_GROUPS the host sort/hash fallback — the strategy
+    cliff the decision surface's grouped axis prices. (The 16-bit
+    BitWeaving payload caps codes at 32767, so the high-cardinality
+    point is 32768 groups rather than a full 64k.)"""
+    rng = np.random.default_rng(7)
+    n = 1 << 18
+    res = {}
+    for card in cards:
+        t = Table(f"card{card}")
+        t.add(BitPackedColumn.from_values("k", rng.integers(0, card, n),
+                                          16))
+        t.add(BitPackedColumn.from_values("v", rng.integers(0, 120, n),
+                                          8))
+        q = GroupBy("k", ("v",))
+        relational.execute_grouped(q, t, mode="xla_ref")   # warm jit
+        r, us = timed(lambda: relational.execute_grouped(
+            q, t, mode="xla_ref"), repeat=3)
+        res[card] = {
+            "strategy": ("dense" if card <= relational.DENSE_MAX_GROUPS
+                         else "fallback"),
+            "groups": len(r["groups"]),
+            "rows_per_s": round(n / (us / 1e6), 1),
+            "groups_per_s": round(len(r["groups"]) / (us / 1e6), 1),
+        }
+    return res
+
+
+def _rle_vs_fallback() -> tuple[dict, object]:
+    """Count-only GroupBy over a *sorted* low-cardinality key, encoded:
+    the fused RLE run-accumulation path (one batched launch, no scatter)
+    against the host sort/hash fallback on the same bytes — the
+    pre-grouped-data win the RLE strategy exists for. The fallback is
+    forced by shrinking the dense cutoff, the documented strategy knob."""
+    from repro.kernels import dispatch
+    from repro.kernels.group_aggregate import ops as gops
+    from repro.store import EncodedTable
+    from repro.store.exec import execute_grouped_encoded
+    rng = np.random.default_rng(11)
+    n = 1 << 18
+    t = Table("rle")
+    t.add(BitPackedColumn.from_values(
+        "k", np.sort(rng.integers(0, 16, n)), 8))
+    t.add(BitPackedColumn.from_values("v", rng.integers(0, 120, n), 8))
+    store = EncodedTable.from_table(t, chunk_rows=4096)
+    assert any(c.encoding.value == "rle"
+               for c in store.columns["k"].chunks), \
+        "sorted low-cardinality key did not RLE-encode"
+    q = GroupBy("k")                              # count-only: RLE-fused
+    execute_grouped_encoded(q, store, mode="xla_ref")      # warm
+    before = dict(dispatch.launch_counts())
+    want, rle_us = timed(lambda: execute_grouped_encoded(
+        q, store, mode="xla_ref"), repeat=3)
+    # timed() makes 1 warm + 3 timed calls after the snapshot
+    launches = {k: (v - before.get(k, 0)) / 4
+                for k, v in dispatch.launch_counts().items()
+                if v != before.get(k, 0)}
+    saved = relational.DENSE_MAX_GROUPS, gops.DENSE_MAX_GROUPS
+    try:
+        relational.DENSE_MAX_GROUPS = gops.DENSE_MAX_GROUPS = 0
+        execute_grouped_encoded(q, store, mode="xla_ref")  # warm numpy
+        got, fb_us = timed(lambda: execute_grouped_encoded(
+            q, store, mode="xla_ref"), repeat=3)
+    finally:
+        relational.DENSE_MAX_GROUPS, gops.DENSE_MAX_GROUPS = saved
+    assert got == want, "RLE-fused and fallback disagree"
+    return ({"rle_pregrouped_us": round(rle_us, 1),
+             "hash_fallback_us": round(fb_us, 1),
+             "speedup": round(fb_us / max(rle_us, 1e-9), 3),
+             "rle_launches_per_query": launches.get(
+                 "group_aggregate_rle", 0.0),
+             "fallback_launches_during_rle": launches.get(
+                 "group_aggregate_fallback", 0.0),
+             "groups": len(want["groups"])}, want)
 
 
 def rows():
@@ -99,6 +180,34 @@ def rows():
         out.append((f"queries/sla_attainment/load={load:g}", 0.0,
                     f"{s['sla_attainment']:.2f}att,{s['rejected']}rej"))
 
+    # --- grouped aggregation & hash join ---------------------------------
+    gq = GroupBy("a", ("b",), where=Pred("c", "lt", 16000))
+    warm_g = QueryEngine(st, mode="xla_ref")
+    warm_g.submit(gq)
+    warm_g.run()
+    eng_g = QueryEngine(st, mode="xla_ref")
+
+    def once_grouped():
+        eng_g.submit(gq)
+        return eng_g.run()[-1]
+
+    res_g, us_g = timed(once_grouped, repeat=3)
+    g_rows_per_s = table.num_rows / (us_g / 1e6)
+    out.append((f"queries/grouped_sharded_{n_dev}shards", us_g,
+                f"{len(res_g.aggregates['groups'])}groups,"
+                f"{g_rows_per_s / 1e6:.1f}Mrows/s"))
+
+    cards = _grouped_cardinality_sweep()
+    for card, c in cards.items():
+        out.append((f"queries/grouped_card={card}", 0.0,
+                    f"{c['rows_per_s'] / 1e6:.1f}Mrows/s,"
+                    f"{c['groups_per_s']:.0f}groups/s,{c['strategy']}"))
+
+    rle, _ = _rle_vs_fallback()
+    out.append(("queries/grouped_rle_vs_fallback", rle["rle_pregrouped_us"],
+                f"{rle['speedup']}x_vs_fallback,"
+                f"{rle['rle_launches_per_query']:g}launch/q"))
+
     append_trajectory(BENCH_PATH, {
         "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
@@ -110,5 +219,12 @@ def rows():
         "attained_fraction": mc["attained_fraction"],
         "provision_100ms_chips": adv.design.compute_chips,
         "sla_vs_load": {str(k): v for k, v in sla.items()},
+        "grouped": {
+            "sharded_us_per_query": round(us_g, 1),
+            "sharded_rows_per_s": round(g_rows_per_s, 1),
+            "sharded_groups": len(res_g.aggregates["groups"]),
+            "cardinality": {str(k): v for k, v in cards.items()},
+            **rle,
+        },
     })
     return out

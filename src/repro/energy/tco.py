@@ -230,6 +230,8 @@ def cheapest_architecture(db_bytes: float, bytes_per_query: float,
                           fast_gbps: float | None = None,
                           n_hot_items: int = 64,
                           compression_ratio: float = 1.0,
+                          grouped_mix: float = 0.0,
+                          grouped_bytes_per_query: float | None = None,
                           bandwidth_rich_prefixes: tuple[str, ...] =
                           BANDWIDTH_RICH_PREFIXES) -> dict:
     """One cell of the decision surface: every candidate provisioned for
@@ -252,10 +254,31 @@ def cheapest_architecture(db_bytes: float, bytes_per_query: float,
     system now meets the SLA (and beats the $/query) that used to
     require HBM. Custom bandwidth-rich specs passed via `systems=` must
     be named in `bandwidth_rich_prefixes` or they are priced compressed.
+
+    `grouped_mix` m blends in the relational slice of the workload:
+    GroupBy/HashJoin queries touch key + value columns instead of a
+    scan's predicate + aggregate set, so they stream
+    `grouped_bytes_per_query` physical bytes (measure it with
+    engine.bytes_scanned on a grouped trace; defaults to
+    bytes_per_query). Every candidate is priced at the blended
+    (1-m)*scan + m*grouped bytes — the axis that answers whether a
+    rollup-heavy workload moves the die-stacking verdict.
     """
     if db_bytes <= 0 or bytes_per_query <= 0:
         raise ValueError(f"db_bytes={db_bytes} and bytes_per_query="
                          f"{bytes_per_query} must be positive")
+    if not (0.0 <= grouped_mix <= 1.0):
+        raise ValueError(f"grouped_mix={grouped_mix} must be a fraction "
+                         f"in [0, 1] (the grouped share of the stream)")
+    if grouped_bytes_per_query is not None and \
+            grouped_bytes_per_query <= 0:
+        raise ValueError(f"grouped_bytes_per_query="
+                         f"{grouped_bytes_per_query} must be positive")
+    if grouped_mix > 0.0:
+        gb = (bytes_per_query if grouped_bytes_per_query is None
+              else grouped_bytes_per_query)
+        bytes_per_query = (1.0 - grouped_mix) * bytes_per_query \
+            + grouped_mix * gb
     if not math.isfinite(sla_s) or sla_s <= 0:
         raise ValueError(f"sla_s={sla_s} must be a finite positive time")
     if not math.isfinite(power_budget_w) or power_budget_w <= 0:
@@ -292,6 +315,7 @@ def cheapest_architecture(db_bytes: float, bytes_per_query: float,
         "skew": skew,
         "power_budget_w": power_budget_w,
         "compression_ratio": compression_ratio,
+        "grouped_mix": grouped_mix,
         "winner": winner and winner["name"],
         "usd_per_query": winner and winner["usd_per_query"],
         "candidates": cands,
@@ -305,25 +329,31 @@ def decision_surface(db_bytes: float, bytes_per_query: float, *,
                      sheet: CostSheet = DEFAULT_COSTS,
                      fast_gbps: float | None = None,
                      n_hot_items: int = 64,
-                     compression_ratios: tuple = (1.0,)) -> dict:
+                     compression_ratios: tuple = (1.0,),
+                     grouped_mixes: tuple = (0.0,),
+                     grouped_bytes_per_query: float | None = None) -> dict:
     """The paper's "when to use" question as a queryable grid: for every
-    (SLA, skew, power budget, compression ratio) cell, the cheapest
-    feasible architecture.
+    (SLA, skew, power budget, compression ratio, grouped mix) cell, the
+    cheapest feasible architecture.
 
     Cells where nothing is feasible report winner=None — the honest
     answer the closed-form figures cannot give. The default budgets are
     the paper's Fig. 4 operating points (50 kW / 250 kW / 1 MW); the
-    default ratio axis is the uncompressed store (one cell per old cell,
-    so the surface is backward-compatible). Passing the measured
-    repro.store ratio alongside 1.0 shows which cells compression flips.
+    default ratio axis is the uncompressed store and the default grouped
+    axis the pure-scan stream (one cell per old cell, so the surface is
+    backward-compatible). Passing the measured repro.store ratio
+    alongside 1.0 shows which cells compression flips; passing grouped
+    mixes with the measured `grouped_bytes_per_query` shows which cells a
+    rollup/join-heavy stream flips.
     """
     cells = [
         cheapest_architecture(db_bytes, bytes_per_query, sla, budget,
                               skew=skew, sheet=sheet, fast_gbps=fast_gbps,
                               n_hot_items=n_hot_items,
-                              compression_ratio=ratio)
+                              compression_ratio=ratio, grouped_mix=mix,
+                              grouped_bytes_per_query=grouped_bytes_per_query)
         for sla in slas for skew in skews for budget in power_budgets_w
-        for ratio in compression_ratios
+        for ratio in compression_ratios for mix in grouped_mixes
     ]
     return {
         "db_bytes": db_bytes,
@@ -332,6 +362,8 @@ def decision_surface(db_bytes: float, bytes_per_query: float, *,
         "skews": list(skews),
         "power_budgets_w": list(power_budgets_w),
         "compression_ratios": list(compression_ratios),
+        "grouped_mixes": list(grouped_mixes),
+        "grouped_bytes_per_query": grouped_bytes_per_query,
         "fast_gbps": fast_gbps,
         "cells": cells,
     }

@@ -1,0 +1,169 @@
+"""Grouped aggregation Pallas TPU kernels: dense accumulator planes.
+
+Two kernels, both writing int32 `(n_groups, 3)` accumulator planes of
+[sum_lo, sum_hi, count] rows (the grouped analogue of aggregate/kernel.py's
+5-scalar row):
+
+- `_dense_*`: one pass over (rows, LANES) int32 key/value/select code
+  planes. Per grid step a (group_block, block_rows, LANES) compare plane
+  matches a block of group keys against the tile in VREGs and reduces
+  into VMEM scratch — a dense accumulator plane instead of a hash table,
+  viable because the store's FOR frames bound the key range.
+- `_rle_*`: the fused pre-grouped path over RLE run planes: a run
+  (value v, length n) contributes n to group v's count and n*v to its
+  sum as ONE register accumulation — no scatter, no per-row traffic. An
+  optional canonical predicate on the run value is evaluated in-kernel.
+
+Exactness mirrors the aggregate family: ops.py bounds block_rows so each
+tile partial stays < 2^31, every tile partial is split 16/16 into two
+running planes, and the final grid step writes the normalized pair. Group
+key blocks are padded with -1 (codes are unsigned, so the sentinel never
+matches); padded rows/runs carry zero select/length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.scan_filter.kernel import LANES
+
+DEFAULT_BLOCK_ROWS = 256
+DEFAULT_GROUP_BLOCK = 8
+
+
+def _accumulate(acc, ids, match, vals, weights=None):
+    """Reduce one (block_rows, LANES) tile into the (group_block, 3)
+    scratch: per group-id row, a masked (weighted) sum split 16/16 plus a
+    (weighted) count."""
+    m = match & (ids[:, None, None] >= 0)
+    w = weights if weights is not None else jnp.int32(1)
+    s = jnp.sum(jnp.where(m, vals[None] * w, 0), axis=(1, 2))
+    c = jnp.sum(jnp.where(m, w, 0), axis=(1, 2))
+    acc[:, 0] += s & 0xFFFF
+    acc[:, 1] += s >> 16
+    acc[:, 2] += c
+
+
+def _writeback(o_ref, acc):
+    lo = acc[:, 0]
+    o_ref[0, :, 0] = lo & 0xFFFF          # normalized planes
+    o_ref[0, :, 1] = acc[:, 1] + (lo >> 16)
+    o_ref[0, :, 2] = acc[:, 2]
+
+
+def _dense_batched_kernel(gk_ref, k_ref, v_ref, s_ref, o_ref, acc):
+    i = pl.program_id(2)
+    ni = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _():
+        acc[...] = jnp.zeros(acc.shape, jnp.int32)
+
+    ids = gk_ref[0]                       # (group_block,)
+    k = k_ref[0]
+    sel = s_ref[0] > 0
+    match = (k[None] == ids[:, None, None]) & sel[None]
+    _accumulate(acc, ids, match, v_ref[0])
+
+    @pl.when(i == ni - 1)
+    def _():
+        _writeback(o_ref, acc)
+
+
+def _rle_batched_kernel(gk_ref, v_ref, l_ref, o_ref, acc, *, pred):
+    i = pl.program_id(2)
+    ni = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _():
+        acc[...] = jnp.zeros(acc.shape, jnp.int32)
+
+    ids = gk_ref[0]
+    v = v_ref[0]
+    l = l_ref[0]
+    live = l > 0
+    if pred is not None:                  # static: baked into the trace
+        prim, const, invert = pred
+        cmp = (v >= const) if prim == "ge" else (v == const)
+        live = live & (cmp ^ invert)
+    match = (v[None] == ids[:, None, None]) & live[None]
+    _accumulate(acc, ids, match, v, weights=l[None])
+
+    @pl.when(i == ni - 1)
+    def _():
+        _writeback(o_ref, acc)
+
+
+def _pad_planes(planes, block_rows):
+    rows = planes[0].shape[-2]
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        planes = [jnp.pad(p, ((0, 0), (0, pad), (0, 0))) for p in planes]
+        rows += pad
+    return planes, rows, block_rows
+
+
+def _pad_groups(group_keys, group_block):
+    g = group_keys.shape[0]
+    group_block = min(group_block, max(g, 1))
+    pad = (-g) % group_block
+    gk = jnp.pad(jnp.asarray(group_keys, jnp.int32), (0, pad),
+                 constant_values=-1)
+    return gk.reshape(-1, group_block), g
+
+
+def _launch(kernel, gk2, planes, rows, block_rows, interpret):
+    n_chunks = planes[0].shape[0]
+    gb = gk2.shape[1]
+    spec = pl.BlockSpec((1, block_rows, LANES), lambda c, g, i: (c, i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_chunks, gk2.shape[0], rows // block_rows),
+        in_specs=[pl.BlockSpec((1, gb), lambda c, g, i: (g, 0))]
+        + [spec] * len(planes),
+        out_specs=pl.BlockSpec((1, gb, 3), lambda c, g, i: (c, g, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, gk2.size, 3), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((gb, 3), jnp.int32)],
+        interpret=interpret,
+    )(gk2, *planes)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "group_block",
+                                             "interpret"))
+def group_sum_count_batched_planes(keys3, vals3, sel3, group_keys, *,
+                                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                                   group_block: int = DEFAULT_GROUP_BLOCK,
+                                   interpret: bool = True):
+    """(n_chunks, rows, LANES) int32 key/value/select planes + (G,) group
+    keys -> int32[n_chunks, G, 3] accumulator planes, all chunks and all
+    group blocks in ONE kernel launch."""
+    planes = [jnp.asarray(p, jnp.int32) for p in (keys3, vals3, sel3)]
+    planes, rows, block_rows = _pad_planes(planes, block_rows)
+    gk2, g = _pad_groups(group_keys, group_block)
+    out = _launch(_dense_batched_kernel, gk2, planes, rows, block_rows,
+                  interpret)
+    return out[:, :g]
+
+
+@functools.partial(jax.jit, static_argnames=("pred", "block_rows",
+                                             "group_block", "interpret"))
+def rle_group_accumulate_batched_planes(vals3, lens3, group_keys, *,
+                                        pred=None,
+                                        block_rows: int = DEFAULT_BLOCK_ROWS,
+                                        group_block: int = DEFAULT_GROUP_BLOCK,
+                                        interpret: bool = True):
+    """(n_chunks, runs, LANES) RLE value/length planes + (G,) group keys
+    -> int32[n_chunks, G, 3]: the fused pre-grouped accumulation, one
+    register update per (run, group block) with zero scatter traffic."""
+    planes = [jnp.asarray(p, jnp.int32) for p in (vals3, lens3)]
+    planes, runs, block_rows = _pad_planes(planes, block_rows)
+    gk2, g = _pad_groups(group_keys, group_block)
+    kernel = functools.partial(_rle_batched_kernel, pred=pred)
+    out = _launch(kernel, gk2, planes, runs, block_rows, interpret)
+    return out[:, :g]

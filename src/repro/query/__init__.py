@@ -9,8 +9,10 @@ two-tier memory system (repro.tier): per-chunk bytes are reported to the
 placement engine and latency/admission are charged at per-tier rates.
 """
 from repro.query.engine import QueryEngine, QueryResult
-from repro.query.plan import And, Or, Plan, Pred, Predicate, Query
+from repro.query.plan import (And, GroupBy, HashJoin, Or, Plan, Pred,
+                              Predicate, Query, is_grouped)
 from repro.query.sharded import ShardedTable
 
-__all__ = ["And", "Or", "Plan", "Pred", "Predicate", "Query",
-           "QueryEngine", "QueryResult", "ShardedTable"]
+__all__ = ["And", "GroupBy", "HashJoin", "Or", "Plan", "Pred",
+           "Predicate", "Query", "QueryEngine", "QueryResult",
+           "ShardedTable", "is_grouped"]

@@ -29,7 +29,7 @@ from dataclasses import dataclass
 
 from repro.kernels.dispatch import KernelMode
 from repro.query import physical
-from repro.query.plan import Query
+from repro.query.plan import Query, is_grouped
 from repro.serve.sla import DeadlineQueue, SLAReport, summarize
 
 
@@ -231,8 +231,14 @@ class QueryEngine:
         (device-resident bytes, shard padding included) — one byte basis,
         so an admitted estimate and the charged service can't diverge.
         `tenant` tags the query's line on the energy meter."""
-        physical.bind_check(query.plan(), query.aggregates,
-                            self.table.columns)
+        if is_grouped(query):
+            # the relational bind adds the join-key width check on top of
+            # the column checks
+            from repro.query import relational
+            relational.bind_check(query, self.table.columns)
+        else:
+            physical.bind_check(query.plan(), query.aggregates,
+                                self.table.columns)
         self._qid += 1
         chunks = (self.chunk_accesses(query) if self.tiered is not None
                   else None)
@@ -245,7 +251,20 @@ class QueryEngine:
 
     # --- execution --------------------------------------------------------
     def _execute(self, query: Query) -> dict:
-        """Exact host-int aggregates, whichever path executes."""
+        """Exact host-int aggregates (or the grouped result dict for
+        GroupBy/HashJoin), whichever path executes."""
+        if is_grouped(query):
+            if self.sharded:
+                return self.table.execute_grouped(query, mode=self.mode)
+            if hasattr(self.table, "chunk_rows"):    # repro.store table
+                from repro.store.exec import execute_grouped_encoded
+                guard = (self.chaos.guard if self.chaos is not None
+                         else None)
+                return execute_grouped_encoded(query, self.table,
+                                               mode=self.mode, guard=guard)
+            from repro.query import relational
+            return relational.execute_grouped(query, self.table,
+                                              mode=self.mode)
         if self.sharded:
             return self.table.execute(query.plan(), query.aggregates,
                                       mode=self.mode)
@@ -325,7 +344,10 @@ class QueryEngine:
                 self.seconds_total += max(t1 - t0, 1e-12)
             self.bytes_total += pend.bytes_scanned
             self.logical_bytes_total += pend.logical_bytes
-            count = (next(iter(aggs.values()))["count"] if aggs else 0)
+            if aggs is not None and "groups" in aggs:
+                count = aggs["count"]        # grouped: total selected rows
+            else:
+                count = (next(iter(aggs.values()))["count"] if aggs else 0)
             res = QueryResult(
                 qid=pend.qid, query=pend.query,
                 aggregates=aggs if aggs is not None else {},

@@ -125,3 +125,118 @@ class Query:
 
     def plan(self) -> Plan:
         return self.where
+
+
+def _normalize_keys(node: str, keys) -> tuple[str, ...]:
+    ks = (keys,) if isinstance(keys, str) else tuple(keys)
+    if len(ks) != 1:
+        raise ValueError(
+            f"{node} supports exactly one group-key column, got "
+            f"{len(ks)}: {list(ks)!r}; compose single-key queries (or "
+            f"widen the dictionary to a composite code) instead")
+    if not isinstance(ks[0], str):
+        raise ValueError(f"{node} key must be a column name, got "
+                         f"{ks[0]!r}")
+    return ks
+
+
+@dataclass(frozen=True)
+class GroupBy:
+    """SELECT key, count(*), sum(agg)... GROUP BY key [WHERE ...].
+
+    keys: one group-key column (a 1-tuple or bare name); aggs: value
+    columns whose per-group exact sums are computed (may be empty — a
+    pure histogram); where: optional Plan tree filtering the rows.
+
+    Like Query, a frozen/hashable admission unit: `.plan()` and
+    `.aggregates` expose the scanned plan tree and columns so the
+    engine's byte/chunk accounting and bind checks work unchanged.
+    """
+    keys: tuple[str, ...]
+    aggs: tuple[str, ...] = ()
+    where: Plan | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "keys", _normalize_keys("GroupBy",
+                                                         self.keys))
+        object.__setattr__(self, "aggs", (self.aggs,) if isinstance(
+            self.aggs, str) else tuple(self.aggs))
+        for a in self.aggs:
+            if a in self.keys:
+                raise ValueError(
+                    f"GroupBy aggregates {a!r}, which is the group key: "
+                    f"per-group sums of the key are its key * count; drop "
+                    f"the aggregate or group by a different column")
+        if self.where is not None:
+            object.__setattr__(self, "where", normalize(self.where))
+
+    @property
+    def key(self) -> str:
+        return self.keys[0]
+
+    def plan(self) -> Plan:
+        # the tautology keeps every grouped query a plan tree, so the
+        # translate/accounting/guard machinery needs no special case
+        return self.where if self.where is not None \
+            else Pred(self.key, "ge", 0)
+
+    @property
+    def aggregates(self) -> tuple[str, ...]:
+        """Columns scanned beyond the plan tree: the value columns plus
+        the key itself (charged like any other scanned column)."""
+        return self.aggs + self.keys
+
+
+@dataclass(frozen=True, eq=False)
+class HashJoin:
+    """Probe-side grouped semi-join: group the engine table's rows whose
+    `probe` key appears in `build`'s `on` column, aggregating probe value
+    columns per join key.
+
+    build: a small dimension table (repro.db.columnar.Table) hashed once
+    and broadcast to every shard; probe: the fact-side key column on the
+    engine's table; on: the build-side key column. eq=False keeps the
+    node hashable-by-identity even though the build table is not, so
+    jitted per-shard executions still cache per join instance.
+    """
+    build: object
+    probe: str
+    on: str
+    aggs: tuple[str, ...] = ()
+    where: Plan | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "aggs", (self.aggs,) if isinstance(
+            self.aggs, str) else tuple(self.aggs))
+        cols = getattr(self.build, "columns", None)
+        if not isinstance(cols, dict) or self.on not in cols:
+            have = sorted(cols) if isinstance(cols, dict) else type(
+                self.build).__name__
+            raise ValueError(
+                f"HashJoin build side has no column {self.on!r}; build "
+                f"must be a Table carrying the join key (has: {have})")
+        for a in self.aggs:
+            if a == self.probe:
+                raise ValueError(
+                    f"HashJoin aggregates {a!r}, which is the probe join "
+                    f"key: per-group sums of the key are its key * count; "
+                    f"drop the aggregate or aggregate a value column")
+        if self.where is not None:
+            object.__setattr__(self, "where", normalize(self.where))
+
+    @property
+    def key(self) -> str:
+        return self.probe
+
+    def plan(self) -> Plan:
+        return self.where if self.where is not None \
+            else Pred(self.probe, "ge", 0)
+
+    @property
+    def aggregates(self) -> tuple[str, ...]:
+        return self.aggs + (self.probe,)
+
+
+def is_grouped(query) -> bool:
+    """True for the relational admission units (GroupBy/HashJoin)."""
+    return isinstance(query, (GroupBy, HashJoin))

@@ -205,3 +205,103 @@ class ShardedTable:
         return jax.jit(shard_map(per_shard, mesh=self.mesh,
                                  in_specs=(P(axis),) * (2 * len(names)),
                                  out_specs=P(), check_rep=False))
+
+    # --- grouped execution (GroupBy / HashJoin) ---------------------------
+    def key_code_range(self, key: str) -> tuple[int, int]:
+        """Observed (kmin, kmax) of a column's codes over the logical
+        rows — what bounds the dense group domain. Cached per column on
+        the host table (codes are immutable)."""
+        cached = self._jitted.get(("range", key))
+        if cached is None:
+            col = self.table.columns[key]
+            codes = np.asarray(packref.unpack(
+                col.words, col.code_bits))[: col.num_rows]
+            cached = self._jitted[("range", key)] = (
+                (int(codes.min()), int(codes.max())) if codes.size
+                else (0, -1))
+        return cached
+
+    def execute_grouped_planes(self, plan, key: str, aggs: tuple, domain,
+                               mode=None) -> dict:
+        """Per-shard grouped accumulator planes, the all-gather combine
+        surface: {value_column_or_'': (n_shards, n_groups, 3)} int32
+        stacks, one normalized [sum_lo, sum_hi, count] plane per shard
+        per value column (one '' plane when aggs is empty).
+
+        `domain` (sorted group keys in THIS table's code domain — the
+        delta domain for the encoded view) broadcasts replicated to every
+        shard, which is exactly how a join's build side ships. Merging
+        the shard planes host-side equals an unsharded execution bit for
+        bit: the planes are normalized per shard and the partial algebra
+        is associative in exact ints."""
+        aggs = tuple(aggs)
+        cache_key = (plan, key, aggs,
+                     None if mode is None else str(mode), "grouped")
+        fn = self._jitted.get(cache_key)
+        if fn is None:
+            fn = self._jitted[cache_key] = self._build_grouped(
+                plan, key, aggs, mode)
+        args = []
+        for n in self._referenced(plan, aggs + (key,)):
+            args += [self.slices[n].words, self.slices[n].valid]
+        stacked = fn(jnp.asarray(np.asarray(domain), jnp.int32), *args)
+        return {name: np.asarray(v) for name, v in stacked.items()}
+
+    def _build_grouped(self, plan, key: str, aggs: tuple, mode):
+        from repro.kernels.group_aggregate import ops as gops
+        from repro.query import relational
+        names = self._referenced(plan, aggs + (key,))
+        bits = {n: self.slices[n].code_bits for n in names}
+        axis = self.axis
+
+        def per_shard(gk, *flat):
+            cols, valid = {}, None
+            for i, n in enumerate(names):
+                cols[n] = jnp.asarray(
+                    packref.unpack(flat[2 * i], bits[n]), jnp.int32)
+                if n == key:
+                    valid = packref.unpack_mask(flat[2 * i + 1], bits[n])
+            sel = relational.eval_plan_codes(plan, cols) & valid
+            keys3 = gops.lift_chunks([cols[key]])
+            sel3 = gops.lift_chunks([sel.astype(jnp.int32)])
+            out = {}
+            for name in (aggs if aggs else ("",)):
+                vals3 = gops.lift_chunks([cols[name]]) if name \
+                    else jnp.zeros_like(keys3)
+                out[name] = gops.group_sum_count_batched(
+                    keys3, vals3, sel3, gk, mode=mode)
+            return out
+
+        return jax.jit(shard_map(
+            per_shard, mesh=self.mesh,
+            in_specs=(P(),) + (P(axis),) * (2 * len(names)),
+            out_specs=P(axis), check_rep=False))
+
+    def execute_grouped(self, query, mode=None) -> dict:
+        """GroupBy/HashJoin across the mesh: per-shard dense accumulator
+        planes all-gathered and merged in exact host ints. Group domains
+        past the dense cutoff fall back to the host numpy path (counted
+        as group_aggregate_fallback launches), still bit-exact."""
+        from repro.kernels import dispatch
+        from repro.query import relational
+        relational.bind_check(query, self.table.columns)
+        if self.num_rows == 0:
+            return relational.empty_result()
+        kmin, kmax = self.key_code_range(query.key)
+        domain = relational.group_domain(query, kmin, kmax)
+        if len(domain) == 0:
+            return relational.empty_result()
+        if not relational.dense_ok(domain):
+            dispatch.count_launch("group_aggregate_fallback",
+                                  self.n_shards)
+            return relational.execute_grouped_oracle(query, self.table)
+        planes = self.execute_grouped_planes(
+            query.plan(), query.key, query.aggs, domain, mode=mode)
+        first = query.aggs[0] if query.aggs else ""
+        part = relational.new_partial()
+        for name, stack in planes.items():
+            for i in range(stack.shape[0]):
+                relational.absorb_plane(part, domain, stack[i],
+                                        name or None,
+                                        count_source=(name == first))
+        return relational.finalize(part)

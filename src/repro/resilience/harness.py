@@ -23,10 +23,12 @@ Accounting contract (the property tests pin this down):
 """
 from __future__ import annotations
 
+from repro.query.plan import is_grouped
 from repro.resilience.faults import FaultInjector, FaultSpec
 from repro.resilience.recover import (ChunkCorruptionError, ChunkGuard,
                                       CircuitBreaker, DegradedResultError,
-                                      execute_degraded)
+                                      execute_degraded,
+                                      execute_grouped_degraded)
 from repro.resilience.retry import RetryPolicy
 
 
@@ -158,9 +160,13 @@ class ChaosHarness:
                     raise DegradedResultError(
                         f"shard {lost[0]} lost during qid={pend.qid} and "
                         f"recovery is disabled")
-                aggs, rec_b = execute_degraded(
-                    engine.table, pend.query.plan(), pend.query.aggregates,
-                    lost, mode=engine.mode)
+                if is_grouped(pend.query):
+                    aggs, rec_b = execute_grouped_degraded(
+                        engine.table, pend.query, lost, mode=engine.mode)
+                else:
+                    aggs, rec_b = execute_degraded(
+                        engine.table, pend.query.plan(),
+                        pend.query.aggregates, lost, mode=engine.mode)
                 extra_cap_b += rec_b
                 rs = pe.tiers.service_s(0, rec_b, chips)
                 extra_s += rs

@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import math
 
+import numpy as np
+
 from repro.query import physical
 from repro.store.exec import fixup_base, identity_ints
 
@@ -238,3 +240,85 @@ def execute_degraded(table, plan, aggregates, lost, mode=None
                              table.store.columns[a].code_bits)
                for a in aggregates}
     return out, recovered_bytes
+
+
+def execute_grouped_degraded(table, query, lost, mode=None
+                             ) -> tuple[dict, int]:
+    """GroupBy/HashJoin failover: surviving shards contribute their
+    per-shard accumulator planes (execute_grouped_planes, the same
+    kernel path the all-gather combine uses), each lost shard's row
+    range is re-aggregated from the capacity-tier host copy in exact
+    numpy ints, and everything merges through the associative host
+    partial algebra — bit-exact vs the fault-free grouped execution by
+    construction. All shards lost raises DegradedResultError; domains
+    past the dense cutoff recover via the host oracle (counted as
+    group_aggregate_fallback launches)."""
+    from repro.kernels import dispatch
+    from repro.kernels.scan_filter import ref as packref
+    from repro.query import relational
+    n = table.n_shards
+    lost = sorted(set(int(i) for i in lost))
+    if any(i < 0 or i >= n for i in lost):
+        raise ValueError(f"lost shard ids {lost} outside [0, {n})")
+    if len(lost) >= n:
+        raise DegradedResultError(
+            f"all {n} shards lost; no surviving device can re-execute "
+            f"the lost row ranges — the query has no exact answer")
+    frames = getattr(table, "frames", None)
+    inner = table.inner if frames is not None else table
+    key = query.key
+    kbase = frames[key][0] if frames is not None else 0
+    if frames is not None:
+        from repro.store.exec import translate_plan
+        raw_plan = translate_plan(query.plan(), frames)
+    else:
+        raw_plan = query.plan()
+    referenced = inner._referenced(raw_plan, tuple(query.aggs) + (key,))
+    recovered_bytes = len(lost) * sum(
+        int(inner.slices[c].words.size) * 4 // n for c in referenced)
+    dmin, dmax = inner.key_code_range(key)
+    if dmax < dmin:
+        return relational.empty_result(), recovered_bytes
+    domain = relational.group_domain(query, kbase + dmin, kbase + dmax)
+    if len(domain) == 0:
+        return relational.empty_result(), recovered_bytes
+    if not relational.dense_ok(domain):
+        dispatch.count_launch("group_aggregate_fallback", n)
+        host = table.store.decode_table() if frames is not None \
+            else table.table
+        return (relational.execute_grouped_oracle(query, host),
+                recovered_bytes)
+    raw_domain = np.asarray(domain) - kbase
+    planes = inner.execute_grouped_planes(raw_plan, key,
+                                          tuple(query.aggs), raw_domain,
+                                          mode=mode)
+    first = query.aggs[0] if query.aggs else ""
+    part = relational.new_partial()
+    lost_set = set(lost)
+    for name, stack in planes.items():
+        vbase = frames[name][0] if (frames is not None and name) else 0
+        for i in range(stack.shape[0]):
+            if i in lost_set:
+                continue
+            relational.absorb_plane(part, raw_domain, stack[i],
+                                    name or None, base=vbase,
+                                    key_base=kbase,
+                                    count_source=(name == first))
+    dom = np.asarray(domain, np.int64)
+    for i in lost:
+        lo, hi = inner.shard_row_range(i)
+        if hi <= lo:
+            continue
+        slices = inner.host_shard_slices(i, names=referenced)
+        cols = {}
+        for cname in referenced:
+            s = slices[cname]
+            cols[cname] = np.asarray(packref.unpack(
+                s.words, s.code_bits)).astype(np.int64)[: hi - lo]
+        sel = np.asarray(relational.eval_plan_codes(raw_plan, cols))
+        keys_log = cols[key] + kbase
+        sel = sel & np.isin(keys_log, dom)
+        vals_log = {a: cols[a] + (frames[a][0] if frames is not None
+                                  else 0) for a in query.aggs}
+        relational.absorb_fallback(part, keys_log, vals_log, sel)
+    return relational.finalize(part), recovered_bytes

@@ -32,6 +32,7 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch
 from repro.kernels.aggregate import ops as agg_ops
 from repro.kernels.scan_aggregate import ops as fused_ops
 from repro.kernels.scan_compressed import ops as rle_ops
@@ -368,3 +369,125 @@ def execute_encoded(plan: Plan, aggregates, table: EncodedTable,
                               table.columns[a].code_bits)
             _accumulate(out[a], part)
     return out
+
+
+# --------------------------------------------------------------------------
+# grouped execution (GroupBy / HashJoin over compressed chunks)
+# --------------------------------------------------------------------------
+
+def _grouped_strategy(query, table, names, domain_ok: bool):
+    """Pick the kernels/group_aggregate strategy per chunk from its
+    EncodingStats: the fused RLE run path when the key chunk is RLE and
+    the query is a count-only shape whose predicate the run kernel can
+    evaluate, dense accumulator planes while the (FOR-framed) group
+    domain stays under DENSE_MAX_GROUPS, the host sort/hash fallback
+    otherwise. Zero-row chunks are skipped (the grouped identity)."""
+    from repro.query import relational
+    kcol = table.columns[query.key]
+    kp = relational.key_only_pred(query, kcol.code_bits)
+    rle_ok = (not query.aggs) and kp is not False
+    rle_cids, dense_cids, fb_cids = [], [], []
+    for ci in range(table.n_chunks):
+        chunks = [table.columns[n].chunks[ci] for n in names]
+        if any(ch.n_rows == 0 for ch in chunks):
+            continue
+        if rle_ok and domain_ok \
+                and kcol.chunks[ci].encoding is Encoding.RLE:
+            rle_cids.append(ci)
+        elif domain_ok:
+            dense_cids.append(ci)
+        else:
+            fb_cids.append(ci)
+    return rle_cids, dense_cids, fb_cids, kp
+
+
+def execute_grouped_encoded(query, table: EncodedTable, mode=None,
+                            guard=None) -> dict:
+    """GroupBy/HashJoin over the compressed chunks -> the finalized
+    grouped result, bit-identical to relational.execute_grouped_oracle
+    on the decoded table.
+
+    Batched like execute_encoded: all RLE-strategy chunks share ONE fused
+    run launch, all dense-strategy chunks share ONE accumulator-plane
+    launch per value column — `(n_chunks, n_groups, 3)` partials sliced
+    host-side with the exact FOR base fix-up (sum += base * count) before
+    the partial dicts merge. `guard` semantics match execute_encoded:
+    every referenced (column, chunk) verifies before the first launch, in
+    (chunk, column) order."""
+    from repro.kernels.group_aggregate import ops as gops
+    from repro.query import relational
+    relational.bind_check(query, table.columns)
+    names = sorted(columns_of(query.plan()) | set(query.aggregates))
+    if guard is not None:
+        for ci in range(table.n_chunks):
+            guard.check([(n, ci) for n in names])
+
+    kcol = table.columns[query.key]
+    stats = [ch.stats for ch in kcol.chunks if ch.n_rows]
+    if not stats:
+        return relational.empty_result()
+    kmin = min(s.vmin for s in stats)
+    kmax = max(s.vmax for s in stats)
+    domain = relational.group_domain(query, kmin, kmax)
+    domain_ok = relational.dense_ok(domain) and len(domain) > 0
+    rle_cids, dense_cids, fb_cids, kp = _grouped_strategy(
+        query, table, names, domain_ok)
+    part = relational.new_partial()
+
+    if rle_cids:
+        planes = [(kcol.chunks[ci].values, kcol.chunks[ci].lengths)
+                  for ci in rle_cids]
+        pred = None if kp == ("ge", 0, False) else kp
+        res = np.asarray(gops.rle_group_accumulate_batched(
+            planes, domain, pred=pred, mode=mode))
+        # normalized [lo, hi, count] planes are additive in int64:
+        # (sum hi << 16) + sum lo == sum((hi << 16) + lo), so all RLE
+        # chunks (base 0, shared domain) absorb as one summed plane
+        relational.absorb_plane(part, domain,
+                                res.astype(np.int64).sum(axis=0), None,
+                                count_source=True)
+
+    if dense_cids:
+        decoded = {n: [table.columns[n].chunks[ci].decode()
+                       for ci in dense_cids] for n in names}
+        sels = []
+        for k, ci in enumerate(dense_cids):
+            cols = {n: decoded[n][k] for n in names}
+            sels.append(np.asarray(
+                relational.eval_plan_codes(query.plan(), cols), np.int32))
+        keys3 = gops.lift_chunks(decoded[query.key])
+        sel3 = gops.lift_chunks(sels)
+        value_cols = query.aggs if query.aggs else (None,)
+        for i, name in enumerate(value_cols):
+            if name is None:
+                vals3 = jnp.zeros_like(keys3)
+                bases = [0] * len(dense_cids)
+            else:
+                col = table.columns[name]
+                bases = [col.chunks[ci].base if col.chunks[ci].encoding
+                         is Encoding.FOR else 0 for ci in dense_cids]
+                vals3 = gops.lift_chunks(
+                    [decoded[name][k].astype(np.int64) - bases[k]
+                     for k in range(len(dense_cids))])
+            res = np.asarray(gops.group_sum_count_batched(
+                keys3, vals3, sel3, domain, mode=mode))
+            for k in range(len(dense_cids)):
+                relational.absorb_plane(part, domain, res[k], name,
+                                        base=bases[k],
+                                        count_source=(i == 0))
+
+    if fb_cids:
+        bk = relational.build_keys(query) \
+            if hasattr(query, "build") else None
+        dispatch.count_launch("group_aggregate_fallback", len(fb_cids))
+        for ci in fb_cids:
+            cols = {n: table.columns[n].chunks[ci].decode()
+                    for n in names}
+            sel = np.asarray(
+                relational.eval_plan_codes(query.plan(), cols), bool)
+            if bk is not None:
+                sel = sel & np.isin(cols[query.key], bk)
+            relational.absorb_fallback(
+                part, cols[query.key],
+                {a: cols[a] for a in query.aggs}, sel)
+    return relational.finalize(part)

@@ -26,7 +26,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.query.plan import Pred, Query
+from repro.query.plan import GroupBy, HashJoin, Pred, Query
 
 
 @dataclass(frozen=True)
@@ -37,6 +37,11 @@ class TraceSpec:
     tenants: int = 4
     selectivities: tuple = (0.1, 0.5, 0.9)
     p_compound: float = 0.25     # fraction of two-predicate AND queries
+    # relational mix: fractions of the stream that are GroupBy rollups /
+    # HashJoin probes (0.0 keeps old traces byte-identical — the grouped
+    # rng draws only happen when a fraction is positive)
+    p_grouped: float = 0.0
+    p_join: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -83,6 +88,28 @@ def make_trace(table, spec: TraceSpec = TraceSpec()) -> list[TracedQuery]:
     rng = np.random.default_rng(spec.seed)
     scrambled = list(rng.permutation(cols))          # rank r -> column
     weights = zipf_weights(len(cols), spec.skew)
+    p_rel = spec.p_grouped + spec.p_join
+    dims: dict = {}
+
+    def dim_for(name: str):
+        """One of a small seeded pool (3 variants per probe column) of
+        dimension tables: sorted distinct keys at the probe's code width,
+        zipf-skewed toward small codes so join hit rates track the same
+        head the placement policies chase."""
+        from repro.db.columnar import BitPackedColumn, Table
+        k = (name, int(rng.integers(3)))
+        if k not in dims:
+            bits = table.columns[name].code_bits
+            vmax = (1 << (bits - 1)) - 1
+            nk = int(min(8, vmax + 1))
+            pool = np.arange(min(vmax + 1, 4 * nk))
+            keys = rng.choice(pool, size=nk, replace=False,
+                              p=zipf_weights(len(pool), spec.skew))
+            d = Table(f"dim-{name}-{k[1]}")
+            d.add(BitPackedColumn.from_values(name, np.sort(keys), bits))
+            dims[k] = d
+        return dims[k]
+
     out: list[TracedQuery] = []
     for _ in range(spec.n_queries):
         tenant = int(rng.integers(spec.tenants))
@@ -99,6 +126,20 @@ def make_trace(table, spec: TraceSpec = TraceSpec()) -> list[TracedQuery]:
             c2 = scrambled[ranks[2]]
             v2 = (1 << (table.columns[c2].code_bits - 1)) - 1
             plan = plan & Pred(c2, "le", max(1, round(0.9 * v2)))
+        if p_rel > 0 and (r := rng.random()) < p_rel:
+            # grouped/join slice of the mix: the predicate column doubles
+            # as the group/join key (its zipf draw is the key skew), the
+            # aggregate column is the rolled-up value; a third of the
+            # rollups are pure histograms (count-only — the fused RLE
+            # path on pre-grouped keys)
+            aggs = () if rng.random() < 1 / 3 else (agg_col,)
+            if r < spec.p_join:
+                q = HashJoin(dim_for(pred_col), pred_col, pred_col,
+                             aggs=aggs, where=plan)
+            else:
+                q = GroupBy(pred_col, aggs, where=plan)
+            out.append(TracedQuery(tenant, q))
+            continue
         out.append(TracedQuery(tenant, Query(plan, aggregates=(agg_col,))))
     return out
 

@@ -25,7 +25,8 @@ def run_child(which: str):
 
 @pytest.mark.parametrize("which", ["pipeline", "pipeline2d", "compression",
                                    "ef", "train", "serve", "elastic",
-                                   "query", "store", "resilience"])
+                                   "query", "store", "resilience",
+                                   "relational"])
 def test_multidevice(which):
     out = run_child(which)
     assert "OK" in out
