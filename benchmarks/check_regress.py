@@ -1,0 +1,97 @@
+"""Bench-trajectory regression gate: newest record vs trajectory median.
+
+Every benchmark module appends one record per run to `BENCH_*.json`, but
+until now nothing *read* the trajectory — a silent 10x throughput loss
+would sail through CI as long as the newest record was internally sane
+(`check_append.py` checks shape, not level). This script closes the loop:
+
+    python benchmarks/check_regress.py            # every known bench
+    python benchmarks/check_regress.py tier store # a subset
+
+For each bench it extracts one *headline* metric (higher is better:
+GB/s, SLA attainment, hit rate) from every record, takes the median of
+the whole trajectory, and fails (exit 1) if the newest record sits more
+than `THRESHOLD` (30%) below that median. A missing trajectory file is
+skipped with a note — not every CI job runs every bench — but a present
+file must parse and yield the metric.
+
+The median (not the max) is the baseline on purpose: trajectories mix
+machines and modes, and a one-off fast outlier should not permanently
+ratchet the gate; a sustained drop still moves the newest record far
+below the median of everything that came before it.
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+THRESHOLD = 0.30      # fail when newest < (1 - THRESHOLD) * median
+
+
+def _resilience_headline(rec: dict) -> float:
+    """Best recovered-policy attainment at the worst nonzero fault rate —
+    the number BENCH_resilience exists to defend."""
+    sweep = rec["sweep"]
+    rates = [r for r in sweep if float(r) > 0]
+    worst = max(rates, key=float) if rates else max(sweep, key=float)
+    per = sweep[worst]
+    return max(v["attainment"] for k, v in per.items() if k != "norecover")
+
+
+HEADLINES = {
+    # bench -> (label, extractor); every metric is higher-is-better
+    "kernels": ("tuned_gbps", lambda r: r["tuned_gbps"]),
+    "queries": ("scan_agg_gbps", lambda r: r["scan_agg_gbps"]),
+    "tier": ("memcache hit_rate @skew=1.1",
+             lambda r: r["policies"]["memcache"]["1.1"]["hit_rate"]),
+    "energy": ("capped attainment",
+               lambda r: r["replay"]["capped"]["attainment"]),
+    "store": ("trace physical_gbps",
+              lambda r: r["trace"]["physical_gbps"]),
+    "resilience": ("recovered attainment @worst rate",
+                   _resilience_headline),
+}
+
+
+def check_bench(name: str) -> tuple[bool, str]:
+    """Returns (ok, message) for one bench trajectory."""
+    label, extract = HEADLINES[name]
+    path = ROOT / f"BENCH_{name}.json"
+    if not path.exists():
+        return True, f"SKIP ({path.name} absent — bench not run here)"
+    hist = json.loads(path.read_text())
+    if not isinstance(hist, list) or not hist:
+        return False, f"{path.name} holds no records"
+    values = [extract(rec) for rec in hist]
+    newest = values[-1]
+    med = statistics.median(values)
+    floor = (1.0 - THRESHOLD) * med
+    detail = (f"{label}: newest={newest:.6g} median={med:.6g} "
+              f"over {len(values)} record(s), floor={floor:.6g}")
+    if med > 0 and newest < floor:
+        drop = 1.0 - newest / med
+        return False, (f"REGRESSION {detail} — newest is {drop:.0%} below "
+                       f"the trajectory median (>{THRESHOLD:.0%} gate)")
+    return True, f"ok  {detail}"
+
+
+def main(argv=None) -> int:
+    names = (argv if argv is not None else sys.argv[1:]) or sorted(HEADLINES)
+    unknown = [n for n in names if n not in HEADLINES]
+    if unknown:
+        raise SystemExit(f"unknown benches {unknown}; known: "
+                         f"{sorted(HEADLINES)}")
+    failed = False
+    for name in names:
+        ok, msg = check_bench(name)
+        print(f"BENCH_{name}.json: {msg}")
+        failed = failed or not ok
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,116 @@
+"""Traced chaos replay: attribute every modeled second, byte, and joule.
+
+The observability walkthrough (PR 9): replay a seeded fault trace with a
+`repro.obs.Tracer` attached, and
+
+1. prove determinism — the exported Chrome trace JSON is byte-identical
+   across two full rebuild-and-replay runs (spans live on the
+   VirtualClock, never the wall clock);
+2. run the conservation audit — for every query, span-attributed bytes
+   and joules equal the EnergyMeter's kind="query"/"recovery"/"prefetch"
+   ledger lines exactly;
+3. print the plain-text waterfall of the most fault-afflicted query —
+   stalls, retries, repairs, and prefetch streams on one timeline;
+4. optionally (`--out trace.json`) write the Perfetto-loadable trace:
+   open ui.perfetto.dev > "Open trace file" and browse per-tenant lanes.
+
+Run:  PYTHONPATH=src python examples/trace_query.py [--out trace.json]
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.db import Table
+from repro.obs import (Tracer, check, chrome_trace_json, unified_snapshot,
+                       waterfall_query)
+from repro.query import physical
+from repro.resilience import (ChaosHarness, ChunkGuard, FaultSpec,
+                              RetryPolicy)
+from repro.store import EncodedTable
+from repro.tier import (Policy, TraceSpec, make_trace, paper_tiers,
+                        replay_trace)
+
+N_COLS, N_ROWS, CHUNK_ROWS = 8, 8192, 512
+SPEC = FaultSpec(seed=42, stall_rate=0.1, corrupt_rate=0.05)
+
+
+def traced_run():
+    """One fault-injected replay with tracing on; rebuilt from scratch so
+    injected corruption never leaks between runs (the same discipline as
+    examples/chaos_replay.py)."""
+    table = Table.synthetic(
+        "events", N_ROWS, {f"c{i:02d}": 8 for i in range(N_COLS)}, seed=0)
+    encoded = EncodedTable.from_table(table, chunk_rows=CHUNK_ROWS)
+    tiers = paper_tiers(table.nbytes * 0.25, fast_gbps=0.016)
+    qtrace = make_trace(table, TraceSpec(n_queries=120, skew=1.2, seed=11))
+    clean_s = (encoded.nbytes
+               / sum(len(c.chunks) for c in encoded.columns.values())
+               / tiers.fast.bandwidth)
+    chaos = ChaosHarness(SPEC, guard=ChunkGuard(encoded),
+                         retry=RetryPolicy(timeout_s=2.0 * clean_s,
+                                           backoff_s=0.5 * clean_s,
+                                           max_retries=2))
+    chaos.inject_corruption()
+    bytes_typ = sum(
+        physical.referenced_bytes(tq.query.plan(), tq.query.aggregates,
+                                  encoded.columns)
+        for tq in qtrace) / len(qtrace)
+    tracer = Tracer()
+    pe, eng, att = replay_trace(
+        encoded, qtrace, tiers, Policy.CACHE,
+        sla_s=2.5 * bytes_typ / tiers.fast.bandwidth,
+        chunk_rows=CHUNK_ROWS, chaos=chaos,
+        prefetch_bytes=table.nbytes // 16, tracer=tracer)
+    return tracer, pe, eng, att
+
+
+def main():
+    out_path = None
+    if "--out" in sys.argv:
+        out_path = sys.argv[sys.argv.index("--out") + 1]
+
+    tracer, pe, eng, att = traced_run()
+    exported = chrome_trace_json(tracer)
+
+    # 1. determinism: a second full rebuild exports the same bytes
+    tracer2, _, _, _ = traced_run()
+    assert chrome_trace_json(tracer2) == exported, \
+        "seeded traced replay diverged between runs"
+    s = tracer.summary()
+    print(f"replay x2 -> byte-identical trace JSON "
+          f"({len(exported)} bytes, {s['queries']} queries, "
+          f"{s['spans']} spans)")
+    print(f"span kinds: {s['span_kinds']}")
+
+    # 2. conservation: every byte/joule on exactly one ledger line
+    report = check(tracer, pe.meter)   # raises ConservationError on leak
+    print(f"conservation audit: {len(report.queries)} queries OK — "
+          f"span bytes == bytes_scanned + recovery + prefetch lines, "
+          f"span joules == EnergyMeter lines (bitwise)")
+
+    # 3. the waterfall of the most fault-afflicted query
+    noisy = max(tracer.queries,
+                key=lambda qt: sum(n for k, n in qt.span_kinds().items()
+                                   if k in ("retry", "failover", "repair",
+                                            "stall", "prefetch_stall")))
+    print(f"\nmost fault-afflicted query (attainment={att:.2f}):")
+    print(waterfall_query(noisy, width=56))
+
+    # one unified snapshot instead of five stats() dialects
+    snap = unified_snapshot(eng)
+    keys = ["tier.hit_rate", "tier.recovery_bytes",
+            "prefetch.streamed_bytes", "prefetch.wasted_bytes",
+            "energy.recovery_j", "sla.attainment"]
+    print("\nunified snapshot:",
+          {k: (round(v, 4) if isinstance(v, float) else v)
+           for k, v in snap.items() if k in keys})
+
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(exported)
+        print(f"\nwrote {out_path} — open in ui.perfetto.dev "
+              f"(Open trace file) or chrome://tracing")
+
+
+if __name__ == "__main__":
+    main()

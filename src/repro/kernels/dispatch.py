@@ -113,23 +113,42 @@ def registered() -> dict[str, KernelOp]:
 # (column, encoding) group. A "launch" is one host->device dispatch of a
 # family's public op — Pallas kernel and XLA_REF oracle alike (the cost
 # being measured is the per-call round trip, which both pay).
+#
+# The counters themselves live in repro.obs.metrics now: increments land
+# in every active MetricsRegistry scope (an engine wrapping execution in
+# its own scope sees only its own launches), and these four functions are
+# backward-compatible shims over the always-active *default* scope — the
+# exact semantics the old module-global dict had.
 
-_LAUNCHES: dict[str, int] = {}
+from repro.obs import metrics as _metrics  # noqa: E402  (import cycle:
+#   obs.metrics is stdlib-only, safe below the jax import)
 
 
 def count_launch(name: str, n: int = 1) -> None:
-    """Record `n` dispatches for kernel family `name`."""
-    _LAUNCHES[name] = _LAUNCHES.get(name, 0) + n
+    """Record `n` dispatches for kernel family `name` (in every active
+    metrics scope)."""
+    _metrics.count_launch(name, n)
+
+
+def record_batch(name: str, width: int, n_chunks: int) -> None:
+    """Record one *batched* dispatch of family `name` covering `n_chunks`
+    chunks at unified payload width `width` — the width-group detail the
+    trace's launch spans carry. Does not add to launch_counts();
+    count_launch still owns the dispatch count."""
+    _metrics.record_batch(name, width, n_chunks)
 
 
 def launch_counts() -> dict[str, int]:
-    """Snapshot of per-family launch counts since the last reset."""
-    return dict(_LAUNCHES)
+    """Snapshot of per-family launch counts since the last reset (the
+    default scope — process-global, as before)."""
+    return _metrics.default_registry().launch_counts()
 
 
 def total_launches() -> int:
-    return sum(_LAUNCHES.values())
+    return _metrics.default_registry().total_launches()
 
 
 def reset_launch_counts() -> None:
-    _LAUNCHES.clear()
+    """Reset the default scope's launch counters. Engine-scoped
+    registries are unaffected — reset your own scope directly."""
+    _metrics.default_registry().reset_launches()

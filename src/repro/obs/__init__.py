@@ -1,0 +1,21 @@
+"""Observability: deterministic query tracing, scoped metrics, audit.
+
+- `trace`   per-query span trees on the VirtualClock (Tracer/NullTracer)
+- `metrics` scoped counter/gauge/histogram registry + unified snapshot
+- `audit`   conservation checker: span bytes/joules == ledger lines
+- `export`  Chrome-trace-event JSON (Perfetto) + plain-text waterfall
+"""
+from repro.obs.audit import AuditReport, ConservationError, audit, check
+from repro.obs.export import (chrome_trace, chrome_trace_json, waterfall,
+                              waterfall_query)
+from repro.obs.metrics import (MetricsRegistry, default_registry, scoped,
+                               unified_snapshot)
+from repro.obs.trace import (NULL_TRACE, NullTracer, QueryTrace, Span,
+                             Tracer)
+
+__all__ = [
+    "AuditReport", "ConservationError", "audit", "check",
+    "chrome_trace", "chrome_trace_json", "waterfall", "waterfall_query",
+    "MetricsRegistry", "default_registry", "scoped", "unified_snapshot",
+    "NULL_TRACE", "NullTracer", "QueryTrace", "Span", "Tracer",
+]

@@ -28,6 +28,8 @@ import time
 from dataclasses import dataclass
 
 from repro.kernels.dispatch import KernelMode
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import NullTracer, layout_pipeline, layout_sync
 from repro.query import physical
 from repro.query.plan import Query, is_grouped
 from repro.serve.sla import DeadlineQueue, SLAReport, summarize
@@ -81,13 +83,27 @@ class QueryEngine:
 
     def __init__(self, table, *, mode=KernelMode.AUTO,
                  clock=time.perf_counter, est_gbps: float = 1.0,
-                 tiered=None, power_cap=None, chaos=None, prefetch=None):
+                 tiered=None, power_cap=None, chaos=None, prefetch=None,
+                 tracer=None, metrics=None):
         self.table = table
         self.mode = KernelMode(mode)
         self.tiered = tiered
         self.power_cap = power_cap
         self.chaos = chaos
         self.prefetch = prefetch
+        # per-engine metrics scope: execution runs inside scoped(metrics),
+        # so launch counts here are this engine's alone while the default
+        # (process-global) scope keeps accumulating for the legacy shims
+        self.metrics = (metrics if metrics is not None
+                        else obs_metrics.MetricsRegistry("engine"))
+        self.tracer = tracer if tracer is not None else NullTracer()
+        if getattr(self.tracer, "enabled", True) and tracer is not None \
+                and tiered is None:
+            # spans are stamped in *modeled* time; a flat engine only has
+            # the wall clock, which would make traces nondeterministic
+            raise ValueError(
+                "tracer= records the modeled tiered timeline; pass "
+                "tiered=repro.tier.PlacementEngine(...) as well")
         if prefetch is not None:
             if tiered is None:
                 # the pipeline overlaps *modeled* tier reads; without the
@@ -278,94 +294,149 @@ class QueryEngine:
             physical.table_slices(self.table), mode=self.mode))
 
     def run(self) -> list[QueryResult]:
-        """Drain the queue in deadline order; returns this batch's results."""
+        """Drain the queue in deadline order; returns this batch's results.
+
+        Each query executes inside this engine's metrics scope, so kernel
+        launch counts attribute to the engine (and, via the trace's launch
+        spans, to the query) without touching the process-global shims."""
         batch: list[QueryResult] = []
         while True:
             got = self.queue.pop()        # sheds now-hopeless queries
             if got is None:
                 break
             pend, deadline = got
-            t0 = self.clock()
-            error = None
-            tier_info = None
-            if self.tiered is not None:
-                # charge the modeled tiered service time instead of wall
-                # time: each chunk at the rate of the tier it lived in
-                if self.chaos is not None:
-                    # the harness owns the fault-injected path: breaker
-                    # gating, verify-on-read, degraded failover, and the
-                    # stall/retry extras folded into busy/joules
-                    aggs, acc, busy, query_j, error = \
-                        self.chaos.run_query(self, pend, t0)
-                else:
-                    # prefetch plans against residency *before* on_access
-                    # mutates it — the same residency the charge uses
-                    pplan = None
-                    if self.prefetch is not None:
-                        pplan = self.prefetch.plan(pend.chunks,
-                                                   chips=self.n_shards)
-                        self.prefetch.begin(pplan, pend.chunks)
-                    aggs = self._execute(pend.query)
-                    acc = self.tiered.on_access(pend.chunks, qid=pend.qid,
-                                                tenant=pend.tenant)
-                    busy = (pplan.service_s if pplan is not None
-                            else self.tiered.service_s(acc, self.n_shards))
-                    self.tiered.meter.charge_compute(acc.charge, busy,
-                                                     self.n_shards)
-                    query_j = acc.charge.total_j
-                    if pplan is not None:
-                        line = self.prefetch.finish(pplan, qid=pend.qid,
-                                                    tenant=pend.tenant)
-                        if line is not None:
-                            query_j += line.total_j
-                service = busy
-                if self.power_cap is not None:
-                    # race-to-idle throttling: the governor stretches wall
-                    # time until no watt window exceeds budget; joules are
-                    # fixed at the busy-time charge, the chip idles the rest
-                    service = self.power_cap.throttled_service_s(
-                        t0, query_j, busy)
-                    self.power_cap.record(t0, t0 + service, query_j,
-                                          natural_s=busy)
-                t1 = self.clock.advance(service)
-                self.seconds_total += service
-                tier_info = {"fast_bytes": acc.fast_bytes,
-                             "capacity_bytes": acc.capacity_bytes,
-                             "hit_fraction": acc.hit_fraction,
-                             "service_s": service,
-                             "energy_j": query_j}
-                if self.power_cap is not None:
-                    tier_info["throttle_s"] = service - busy
-            else:
-                aggs = self._execute(pend.query)
-                # finalize inside _execute forces the device sync, so
-                # t1 - t0 covers the full scan
-                t1 = self.clock()
-                self.seconds_total += max(t1 - t0, 1e-12)
-            self.bytes_total += pend.bytes_scanned
-            self.logical_bytes_total += pend.logical_bytes
-            if aggs is not None and "groups" in aggs:
-                count = aggs["count"]        # grouped: total selected rows
-            else:
-                count = (next(iter(aggs.values()))["count"] if aggs else 0)
-            res = QueryResult(
-                qid=pend.qid, query=pend.query,
-                aggregates=aggs if aggs is not None else {},
-                count=count,
-                selectivity=count / max(self.num_rows, 1),
-                bytes_scanned=pend.bytes_scanned,
-                latency_s=t1 - pend.submitted_at,
-                deadline=deadline,
-                met=t1 <= deadline and error is None, tier=tier_info,
-                logical_bytes=pend.logical_bytes,
-                degraded=error is not None, error=error)
-            self.reports.append(SLAReport(
-                rid=pend.qid, deadline=deadline,
-                submitted_at=pend.submitted_at, finished_at=t1,
-                work=pend.bytes_scanned, degraded=error is not None))
-            self.results.append(res)
-            batch.append(res)
+            with obs_metrics.scoped(self.metrics):
+                batch.append(self._serve_one(pend, deadline))
         return batch
+
+    def _emit_launches(self, qt, before: dict, ts: float) -> None:
+        """Turn this query's per-engine counter deltas into launch spans:
+        one per kernel family (attrs: family, n) and one per batched
+        width group (attrs: family, width, n, n_chunks)."""
+        for key in sorted(self.metrics.counters):
+            d = self.metrics.counters[key].value - before.get(key, 0)
+            if d <= 0:
+                continue
+            if key.startswith("launches/"):
+                qt.add("launch", t0=ts, family=key[len("launches/"):],
+                       n=d)
+            elif key.startswith("batch/"):
+                _, family, w = key.split("/", 2)
+                covered = (self.metrics.counters[
+                    f"batch_chunks/{family}/{w}"].value
+                    - before.get(f"batch_chunks/{family}/{w}", 0))
+                qt.add("launch_batch", t0=ts, family=family,
+                       width=int(w[1:]), n=d, n_chunks=covered)
+
+    def _serve_one(self, pend: _Pending, deadline: float) -> QueryResult:
+        t0 = self.clock()
+        qt = self.tracer.begin_query(
+            pend.qid, tenant=pend.tenant, submitted_at=pend.submitted_at,
+            deadline=deadline, bytes_expected=pend.bytes_scanned)
+        trace = qt if qt.enabled else None
+        if trace is not None:
+            qt.begin_run(t0)
+        launches0 = ({k: c.value
+                      for k, c in self.metrics.counters.items()}
+                     if trace is not None else None)
+        error = None
+        tier_info = None
+        if self.tiered is not None:
+            # charge the modeled tiered service time instead of wall
+            # time: each chunk at the rate of the tier it lived in
+            if self.chaos is not None:
+                # the harness owns the fault-injected path: breaker
+                # gating, verify-on-read, degraded failover, and the
+                # stall/retry extras folded into busy/joules — and the
+                # recovery span tree when tracing
+                aggs, acc, busy, query_j, error = \
+                    self.chaos.run_query(self, pend, t0, trace=trace)
+            else:
+                # prefetch plans against residency *before* on_access
+                # mutates it — the same residency the charge uses
+                pplan = None
+                if self.prefetch is not None:
+                    pplan = self.prefetch.plan(pend.chunks,
+                                               chips=self.n_shards)
+                    self.prefetch.begin(pplan, pend.chunks)
+                aggs = self._execute(pend.query)
+                acc = self.tiered.on_access(pend.chunks, qid=pend.qid,
+                                            tenant=pend.tenant,
+                                            trace=trace)
+                busy = (pplan.service_s if pplan is not None
+                        else self.tiered.service_s(acc, self.n_shards))
+                self.tiered.meter.charge_compute(acc.charge, busy,
+                                                 self.n_shards)
+                query_j = acc.charge.total_j
+                if trace is not None:
+                    if pplan is not None:
+                        layout_pipeline(trace, t0, pplan,
+                                        self.tiered.tiers, self.n_shards)
+                    else:
+                        layout_sync(trace, t0, self.tiered.tiers,
+                                    self.n_shards)
+                    trace.compute(t0, busy, self.n_shards,
+                                  self.tiered.meter.compute_w
+                                  * self.n_shards * busy)
+                if pplan is not None:
+                    line = self.prefetch.finish(pplan, qid=pend.qid,
+                                                tenant=pend.tenant)
+                    if line is not None:
+                        query_j += line.total_j
+            service = busy
+            if self.power_cap is not None:
+                # race-to-idle throttling: the governor stretches wall
+                # time until no watt window exceeds budget; joules are
+                # fixed at the busy-time charge, the chip idles the rest
+                service = self.power_cap.throttled_service_s(
+                    t0, query_j, busy)
+                self.power_cap.record(t0, t0 + service, query_j,
+                                      natural_s=busy)
+                if trace is not None and service > busy:
+                    qt.add("throttle", t0=t0 + busy,
+                           dur_s=service - busy)
+            t1 = self.clock.advance(service)
+            self.seconds_total += service
+            tier_info = {"fast_bytes": acc.fast_bytes,
+                         "capacity_bytes": acc.capacity_bytes,
+                         "hit_fraction": acc.hit_fraction,
+                         "service_s": service,
+                         "energy_j": query_j}
+            if self.power_cap is not None:
+                tier_info["throttle_s"] = service - busy
+        else:
+            aggs = self._execute(pend.query)
+            # finalize inside _execute forces the device sync, so
+            # t1 - t0 covers the full scan
+            t1 = self.clock()
+            self.seconds_total += max(t1 - t0, 1e-12)
+        if trace is not None:
+            self._emit_launches(qt, launches0, t0)
+            qt.close(t1, met=t1 <= deadline and error is None,
+                     degraded=error is not None, error=error)
+        self.bytes_total += pend.bytes_scanned
+        self.logical_bytes_total += pend.logical_bytes
+        if aggs is not None and "groups" in aggs:
+            count = aggs["count"]        # grouped: total selected rows
+        else:
+            count = (next(iter(aggs.values()))["count"] if aggs else 0)
+        res = QueryResult(
+            qid=pend.qid, query=pend.query,
+            aggregates=aggs if aggs is not None else {},
+            count=count,
+            selectivity=count / max(self.num_rows, 1),
+            bytes_scanned=pend.bytes_scanned,
+            latency_s=t1 - pend.submitted_at,
+            deadline=deadline,
+            met=t1 <= deadline and error is None, tier=tier_info,
+            logical_bytes=pend.logical_bytes,
+            degraded=error is not None, error=error)
+        self.reports.append(SLAReport(
+            rid=pend.qid, deadline=deadline,
+            submitted_at=pend.submitted_at, finished_at=t1,
+            work=pend.bytes_scanned, degraded=error is not None))
+        self.results.append(res)
+        return res
 
     # --- reporting / model feedback --------------------------------------
     def summary(self) -> dict:
@@ -388,6 +459,8 @@ class QueryEngine:
             out["power"] = self.power_cap.report(now=self.clock())
         if self.chaos is not None:
             out["resilience"] = self.chaos.summary()
+        if getattr(self.tracer, "enabled", False):
+            out["trace"] = self.tracer.summary()
         return out
 
     def model_check(self, system=None) -> dict:

@@ -108,13 +108,20 @@ class ChaosHarness:
         return est_s * (1.0 + exp_abandons) + max(n_chunks, 1) * per_chunk
 
     # --- the fault-injected query path ------------------------------------
-    def run_query(self, engine, pend, t0: float):
+    def run_query(self, engine, pend, t0: float, trace=None):
         """Execute one admitted query under injected faults.
 
         Returns (aggs | None, access, busy_s, query_j, error | None):
         `busy_s` is nominal tiered service plus recovery extras, `query_j`
         the nominal charge plus the recovery line, `error` a typed
         degraded message (aggs is None exactly when error is set).
+
+        `trace` (obs.trace.QueryTrace) gets the recovery span tree on top
+        of the nominal reads: repair / shard_failover / stall / retry /
+        failover / prefetch_stall spans whose byte sums are exactly the
+        (extra_fast_b, extra_cap_b) this method folds into its single
+        kind="recovery" ledger line — the conservation the obs.audit
+        checker proves per query.
         """
         pe = engine.tiered
         chips = engine.n_shards
@@ -122,6 +129,8 @@ class ChaosHarness:
         extra_s = 0.0
         extra_fast_b = 0
         extra_cap_b = 0
+        rec_events = []   # (kind, bytes, seconds, attrs) gathered during
+        #                   execution, laid out after the nominal reads
         # 1. circuit breaker gates the fast tier for this access
         if self.breaker is not None:
             pe.demoted = not self.breaker.allow_fast(t0)
@@ -172,6 +181,8 @@ class ChaosHarness:
                 extra_s += rs
                 self._recovered(rs)
                 self.shard_recoveries += 1
+                rec_events.append(("shard_failover", rec_b, rs,
+                                   {"shards": tuple(lost)}))
             else:
                 aggs = engine._execute(pend.query)
         except DegradedResultError as e:
@@ -185,15 +196,32 @@ class ChaosHarness:
                 rs = pe.tiers.service_s(0, rb, chips)
                 extra_s += rs
                 self._recovered(rs)
-                self.repairs += len(self.guard.repaired) - repaired_n0
+                n_rep = len(self.guard.repaired) - repaired_n0
+                self.repairs += n_rep
+                rec_events.append(("repair", rb, rs, {"chunks": n_rep}))
         # 4. nominal access: charged once whether or not the query
         #    degraded — the bytes streamed up to the failure either way;
         #    with a prefetch pipeline the busy time is the pipelined
         #    (stall-degraded) service, the byte charge is unchanged
-        acc = pe.on_access(pend.chunks, qid=pend.qid, tenant=pend.tenant)
+        acc = pe.on_access(pend.chunks, qid=pend.qid, tenant=pend.tenant,
+                           trace=trace)
         busy = pplan.service_s if pplan is not None \
             else pe.service_s(acc, chips)
         pe.meter.charge_compute(acc.charge, busy, chips)
+        cursor = t0
+        if trace is not None:
+            from repro.obs.trace import layout_pipeline, layout_sync
+            cursor = (layout_pipeline(trace, t0, pplan, pe.tiers, chips)
+                      if pplan is not None
+                      else layout_sync(trace, t0, pe.tiers, chips))
+            trace.compute(t0, busy, chips,
+                          pe.meter.compute_w * chips * busy)
+            cap_e = pe.tiers.capacity.energy_per_byte
+            for kind, b, rs, attrs in rec_events:
+                trace.add(kind, t0=cursor, dur_s=rs, nbytes=b,
+                          tier="capacity", ledger="recovery",
+                          joules=b * cap_e, **attrs)
+                cursor += rs
         query_j_extra = 0.0
         if pplan is not None:
             # overlap's own traffic on the kind="prefetch" line; the
@@ -208,8 +236,9 @@ class ChaosHarness:
         # 5. stall / retry / failover on each fast-tier chunk read
         saw_stall = False
         for cid in sorted(fast_cids):
-            ex, fb, cb, stalled = self._chunk_read(
-                engine, pend.qid, cid, fast_cids[cid], chips)
+            ex, fb, cb, stalled, cursor = self._chunk_read(
+                engine, pend.qid, cid, fast_cids[cid], chips,
+                trace=trace, at=cursor)
             extra_s += ex
             extra_fast_b += fb
             extra_cap_b += cb
@@ -225,13 +254,17 @@ class ChaosHarness:
         return (aggs, acc, busy + extra_s,
                 acc.charge.total_j + query_j_extra + recovery_j, error)
 
-    def _chunk_read(self, engine, qid: int, cid, nbytes: int, chips: int):
+    def _chunk_read(self, engine, qid: int, cid, nbytes: int, chips: int,
+                    trace=None, at: float = 0.0):
         """Model one fast-tier chunk read under the stall fault + retry
         policy. Returns (extra_s, extra_fast_bytes, extra_capacity_bytes,
-        stalled): extras beyond the one clean read the nominal service
-        already priced."""
+        stalled, cursor): extras beyond the one clean read the nominal
+        service already priced; `cursor` advances past the recovery spans
+        emitted on `trace` starting at `at`."""
         pe = engine.tiered
         clean_s = pe.tiers.service_s(nbytes, 0, chips)
+        fast_e = pe.tiers.fast.energy_per_byte
+        cap_e = pe.tiers.capacity.energy_per_byte
         total = 0.0
         fast_b = 0
         cap_b = 0
@@ -249,27 +282,51 @@ class ChaosHarness:
             if not (self.recover and self.retry is not None):
                 # no retry policy: the stalled read rides to completion
                 total += self.spec.stall_factor * clean_s
+                if trace is not None:
+                    ride = (self.spec.stall_factor - 1.0) * clean_s
+                    trace.add("stall", t0=at, dur_s=ride, cid=cid,
+                              attempt=attempt)
+                    at += ride
                 break
             if self.spec.stall_factor * clean_s <= self.retry.timeout_s:
                 # slow, but lands inside the timeout: no abandon
                 total += self.spec.stall_factor * clean_s
+                if trace is not None:
+                    ride = (self.spec.stall_factor - 1.0) * clean_s
+                    trace.add("stall", t0=at, dur_s=ride, cid=cid,
+                              attempt=attempt)
+                    at += ride
                 break
             if attempt >= self.retry.max_retries:
                 # retry budget exhausted: fail over to the durable
                 # capacity copy
-                total += (self.retry.timeout_s
-                          + pe.tiers.service_s(0, nbytes, chips))
+                fo = (self.retry.timeout_s
+                      + pe.tiers.service_s(0, nbytes, chips))
+                total += fo
                 cap_b += nbytes
                 self.failovers += 1
+                if trace is not None:
+                    trace.add("failover", t0=at, dur_s=fo, nbytes=nbytes,
+                              tier="capacity", ledger="recovery",
+                              joules=nbytes * cap_e, cid=cid,
+                              attempt=attempt)
+                    at += fo
                 break
-            total += self.retry.timeout_s + self.retry.backoff(attempt)
+            rt = self.retry.timeout_s + self.retry.backoff(attempt)
+            total += rt
             fast_b += nbytes        # the re-issued read streams again
             self.retries += 1
+            if trace is not None:
+                trace.add("retry", t0=at, dur_s=rt, nbytes=nbytes,
+                          tier="fast", ledger="recovery",
+                          joules=nbytes * fast_e, cid=cid,
+                          attempt=attempt)
+                at += rt
             attempt += 1
         extra = max(total - clean_s, 0.0)
         if faulted and self.recover and self.retry is not None:
             self._recovered(extra)
-        return extra, fast_b, cap_b, faulted
+        return extra, fast_b, cap_b, faulted, at
 
     # --- reporting --------------------------------------------------------
     def _recovered(self, seconds: float) -> None:

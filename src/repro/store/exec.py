@@ -283,6 +283,8 @@ def _execute_batched(plan: Plan, aggregates, table: EncodedTable,
                   for ci in rle_cids]
         res = np.asarray(rle_ops.rle_scan_aggregate_batched(
             planes, plan.constant, plan.op, col.code_bits, mode=mode))
+        dispatch.record_batch("rle_scan_aggregate", col.code_bits,
+                              len(rle_cids))
         for k in range(len(rle_cids)):
             _accumulate(out[plan.column],
                         agg_ops.finalize(_row_dict(res[k])))
@@ -301,6 +303,7 @@ def _execute_batched(plan: Plan, aggregates, table: EncodedTable,
             res = np.asarray(fused_ops.scan_aggregate_batched(
                 bound[pcol].words, bound[acol].words, bound[pcol].valid,
                 triples, W, mode=mode))
+            dispatch.record_batch("scan_aggregate", W, len(cids))
             for k in range(len(cids)):
                 part = fixup_base(agg_ops.finalize(_row_dict(res[k])),
                                   bound[acol].bases[k],
@@ -308,10 +311,12 @@ def _execute_batched(plan: Plan, aggregates, table: EncodedTable,
                 _accumulate(out[acol], part)
             continue
         mask3 = _batched_mask(tplans, bound, W, mode)
+        dispatch.record_batch("scan_filter", W, len(cids))
         for acol in aggregates:
             g = bound[acol]
             res = np.asarray(agg_ops.aggregate_batched(g.words, mask3, W,
                                                        mode=mode))
+            dispatch.record_batch("aggregate", W, len(cids))
             for k in range(len(cids)):
                 part = fixup_base(agg_ops.finalize(_row_dict(res[k])),
                                   g.bases[k],
@@ -440,6 +445,8 @@ def execute_grouped_encoded(query, table: EncodedTable, mode=None,
         pred = None if kp == ("ge", 0, False) else kp
         res = np.asarray(gops.rle_group_accumulate_batched(
             planes, domain, pred=pred, mode=mode))
+        dispatch.record_batch("rle_group_accumulate", kcol.code_bits,
+                              len(rle_cids))
         # normalized [lo, hi, count] planes are additive in int64:
         # (sum hi << 16) + sum lo == sum((hi << 16) + lo), so all RLE
         # chunks (base 0, shared domain) absorb as one summed plane
@@ -471,6 +478,8 @@ def execute_grouped_encoded(query, table: EncodedTable, mode=None,
                      for k in range(len(dense_cids))])
             res = np.asarray(gops.group_sum_count_batched(
                 keys3, vals3, sel3, domain, mode=mode))
+            dispatch.record_batch("group_sum_count", len(domain),
+                                  len(dense_cids))
             for k in range(len(dense_cids)):
                 relational.absorb_plane(part, domain, res[k], name,
                                         base=bases[k],

@@ -253,7 +253,7 @@ class PlacementEngine:
     # --- the access path --------------------------------------------------
     def on_access(self, chunk_bytes: dict[tuple[str, int], int], *,
                   qid: int | None = None,
-                  tenant: int | None = None) -> Access:
+                  tenant: int | None = None, trace=None) -> Access:
         """Charge one query's per-chunk byte counts and update placement.
 
         `chunk_bytes` comes from query.physical.referenced_chunk_bytes or
@@ -261,6 +261,11 @@ class PlacementEngine:
         query's byte split; cumulative totals feed hit_rate and the
         blended admission rate, and the byte split opens a line on the
         energy meter (tagged qid/tenant for the per-tenant bill).
+
+        `trace` (an obs.trace.QueryTrace) gets one "read" span per chunk,
+        emitted from the same hit/miss decision being charged — the traced
+        split cannot drift from the billed one. Span times are laid out
+        afterwards by the caller (obs.trace.layout_sync/layout_pipeline).
         """
         acc = Access()
         for cid, b in chunk_bytes.items():
@@ -285,6 +290,11 @@ class PlacementEngine:
             else:
                 acc.capacity_bytes += b
                 acc.n_miss += 1
+            if trace is not None:
+                tier = self.tiers.fast if hit else self.tiers.capacity
+                trace.read(cid, b, tier="fast" if hit else "capacity",
+                           hit=hit, inflight=cid in self.inflight,
+                           joules=b * tier.energy_per_byte)
             if self.policy is Policy.CACHE:
                 self._cache_touch(i, resident)
             elif self.policy is Policy.MEMCACHE:

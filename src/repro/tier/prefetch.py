@@ -60,6 +60,10 @@ class PrefetchPlan:
     n_staged: int = 0
     n_stalled: int = 0
     n_cancelled: int = 0
+    stages: tuple = ()           # the per-chunk _Stage timeline, in scan
+    #                              order — obs.trace.layout_pipeline
+    #                              replays the same window model onto the
+    #                              trace's read spans
 
     @property
     def used(self) -> bool:
@@ -101,6 +105,11 @@ class PrefetchPipeline:
         self.stalled_total = 0
         self.cancelled_total = 0
         self.saved_s_total = 0.0
+        # the pipeline's own byte ledger — maintained independently of the
+        # PlacementEngine's prefetch_*_bytes_total so obs.unified_snapshot
+        # can cross-check the two sources instead of echoing one of them
+        self.streamed_bytes_total = 0
+        self.wasted_bytes_total = 0
 
     def close(self) -> None:
         self.pe.release_prefetch(self.reserved_bytes)
@@ -188,7 +197,8 @@ class PrefetchPipeline:
             staged_cids=tuple(st.cid for st in stages if st.staged),
             n_staged=len(ok),
             n_stalled=sum(1 for st in stages if st.stalled),
-            n_cancelled=sum(1 for st in stages if st.cancelled))
+            n_cancelled=sum(1 for st in stages if st.cancelled),
+            stages=tuple(stages))
 
     # --- execution-window bookkeeping -------------------------------------
     def begin(self, plan: PrefetchPlan, chunk_bytes: dict) -> None:
@@ -211,6 +221,8 @@ class PrefetchPipeline:
         self.stalled_total += plan.n_stalled
         self.cancelled_total += plan.n_cancelled
         self.saved_s_total += plan.overlap_saved_s
+        self.streamed_bytes_total += int(plan.staged_bytes)
+        self.wasted_bytes_total += int(plan.cancelled_bytes)
         return self.pe.charge_prefetch(plan.staged_bytes,
                                        plan.cancelled_bytes,
                                        qid=qid, tenant=tenant)
@@ -224,6 +236,6 @@ class PrefetchPipeline:
             "stalled_chunks": self.stalled_total,
             "cancelled_chunks": self.cancelled_total,
             "overlap_saved_s": self.saved_s_total,
-            "streamed_bytes": int(self.pe.prefetch_streamed_bytes_total),
-            "wasted_bytes": int(self.pe.prefetch_wasted_bytes_total),
+            "streamed_bytes": int(self.streamed_bytes_total),
+            "wasted_bytes": int(self.wasted_bytes_total),
         }

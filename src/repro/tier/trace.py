@@ -147,7 +147,8 @@ def make_trace(table, spec: TraceSpec = TraceSpec()) -> list[TracedQuery]:
 def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
                  chunk_rows: int = 1024, warmup_fraction: float = 1 / 3,
                  mode: str = "xla_ref", compute_w: float = 0.0,
-                 power_cap=None, chaos=None, prefetch_bytes: int = 0):
+                 power_cap=None, chaos=None, prefetch_bytes: int = 0,
+                 tracer=None):
     """Closed-loop replay of a trace against a tiered QueryEngine — the
     one attainment methodology shared by benchmarks/tier_bench.py,
     examples/tiered_store.py, and tests.
@@ -176,6 +177,10 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
     overlap with scans, service per stage is max(scan, stream) instead of
     the sum, and in-flight chunks are counted as fast by admission
     projections (never double-charged). Reach it as `eng.prefetch`.
+
+    `tracer` (a repro.obs.Tracer) records every query's span tree on the
+    replay's VirtualClock — deterministic, so a seeded chaos replay
+    exports byte-identical trace JSON on every run (repro.obs.export).
     """
     from repro.energy.meter import EnergyMeter
     from repro.query import QueryEngine
@@ -190,7 +195,8 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
           else None)
     clk = VirtualClock()
     eng = QueryEngine(table, mode=mode, tiered=pe, clock=clk,
-                      power_cap=power_cap, chaos=chaos, prefetch=pf)
+                      power_cap=power_cap, chaos=chaos, prefetch=pf,
+                      tracer=tracer)
     warmup = int(len(trace) * warmup_fraction) if sla_s is not None else \
         len(trace)
     met = offered = 0
