@@ -27,7 +27,16 @@ def _load(name: str) -> tuple[list, dict]:
     hist = json.loads(path.read_text())
     assert isinstance(hist, list) and hist, \
         f"{path.name} holds no records"
-    return hist, hist[-1]
+    rec = hist[-1]
+    # the obs digest is additive — old rows without one still load — but
+    # when present it must carry the diffable schema the explainer reads
+    obs = rec.get("obs")
+    if obs is not None:
+        assert isinstance(obs.get("v"), int), obs
+        assert isinstance(obs.get("snapshot"), dict), obs
+        assert isinstance(obs.get("categories"), dict), obs
+        assert isinstance(obs.get("queries"), int), obs
+    return hist, rec
 
 
 def check_kernels() -> str:

@@ -22,6 +22,19 @@ def append_trajectory(path, rec: dict) -> None:
     path.write_text(json.dumps(hist, indent=1))
 
 
+def obs_digest(engine, tracer=None):
+    """The repro.obs.diff digest a trajectory row carries under
+    rec["obs"] — the canonical baseline the trace-diff explainer
+    (check_regress.py --explain) diffs against. Returns None when the
+    repro package is not importable (standalone CSV runs), keeping old
+    rows and old invocations loadable — the digest is additive."""
+    try:
+        from repro.obs.diff import digest
+    except ImportError:
+        return None
+    return digest(engine, tracer)
+
+
 def timed(fn, *args, repeat: int = 5, **kw):
     """Returns (result, microseconds per call)."""
     fn(*args, **kw)                     # warm (jit/cache)

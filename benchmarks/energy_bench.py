@@ -26,7 +26,7 @@ from pathlib import Path
 
 import jax
 
-from benchmarks.common import append_trajectory
+from benchmarks.common import append_trajectory, obs_digest
 from repro.core.advisor import advise_cost
 from repro.core.systems import DIE_STACKED, TiB
 from repro.db import Table
@@ -100,6 +100,9 @@ def _capped_replay() -> tuple[list, dict]:
                    "rejected": ceng.summary()["rejected"]},
         "by_tenant": {str(k): v for k, v in
                       sorted(ceng.summary()["energy"]["by_tenant"].items())},
+        # the capped replay is the gated headline; its digest is the
+        # trace-diff explainer's baseline
+        "obs": obs_digest(ceng),
     }
     rows = [
         ("energy/replay/uncapped", uncapped_us,
@@ -154,6 +157,9 @@ def rows():
         "backend": jax.default_backend(),
         "replay": replay_rec,
         "surface": surface_rec,
+        # every bench record carries its digest at the top level — the
+        # one place check_regress.py's explainer looks
+        "obs": replay_rec.pop("obs"),
     }
     append_trajectory(BENCH_PATH, record)
     return replay_rows + surface_rows

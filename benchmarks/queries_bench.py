@@ -25,7 +25,7 @@ if "jax" not in sys.modules:          # must precede the first jax import
 import jax
 import numpy as np
 
-from benchmarks.common import append_trajectory, timed
+from benchmarks.common import append_trajectory, obs_digest, timed
 from repro.db import Table
 from repro.db.columnar import BitPackedColumn
 from repro.launch.mesh import make_mesh
@@ -226,5 +226,8 @@ def rows():
             "cardinality": {str(k): v for k, v in cards.items()},
             **rle,
         },
+        # flat engine: the digest carries snapshot scalars + launch
+        # counts (no tier ledger), still diffable by the explainer
+        "obs": obs_digest(eng),
     })
     return out

@@ -35,7 +35,7 @@ from pathlib import Path
 
 import jax
 
-from benchmarks.common import append_trajectory
+from benchmarks.common import append_trajectory, obs_digest
 from benchmarks.store_bench import compressible_table
 from repro.query import physical
 from repro.resilience import ChaosHarness, ChunkGuard, FaultSpec, RetryPolicy
@@ -105,7 +105,7 @@ def _run(spec, retry, recover, trace, tiers, chunk_rows, sla_s,
         "rejected": es["rejected"],
         "recovery_j": round(pe.meter.recovery_j, 6),
         "recovery_bytes": pe.recovery_bytes_total,
-    }, wall_us
+    }, wall_us, eng
 
 
 def rows():
@@ -132,11 +132,15 @@ def rows():
                          corrupt_rate=CORRUPT_RATE if rate else 0.0)
         per_rate: dict = {}
         for name, retry in policies.items():
-            r, wall_us = _run(spec, retry, recover=retry is not None,
-                              trace=trace, tiers=tiers,
-                              chunk_rows=chunk_rows, sla_s=sla_s,
-                              n_cols=n_cols, n_rows=n_rows)
+            r, wall_us, eng = _run(spec, retry, recover=retry is not None,
+                                   trace=trace, tiers=tiers,
+                                   chunk_rows=chunk_rows, sla_s=sla_s,
+                                   n_cols=n_cols, n_rows=n_rows)
             per_rate[name] = r
+            if name == "patient" and rate == max(STALL_RATES):
+                # the worst-rate recovered run feeds the gated headline;
+                # its digest is the trace-diff explainer's baseline
+                record["obs"] = obs_digest(eng)
             out.append((f"resilience/{name}/rate={rate:g}", wall_us,
                         f"att={r['attainment']:.2f},"
                         f"stalls={r['stalls']},deg={r['degraded']},"

@@ -42,7 +42,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from benchmarks.common import append_trajectory
+from benchmarks.common import append_trajectory, obs_digest
 from repro.db.columnar import BitPackedColumn, Table
 from repro.energy.tco import (cheapest_architecture,
                               compression_crossover_ratio)
@@ -223,6 +223,9 @@ def rows():
         "plain_us_per_query": round(plain_us, 1),
         "encoded_us_per_query": round(enc_us, 1),
         "overlap": overlap,
+        # the encoded replay produces the gated physical_gbps headline;
+        # its digest is the trace-diff explainer's baseline
+        "obs": obs_digest(eng_e),
     }
     append_trajectory(BENCH_PATH, record)
     last = overlap["points"][-1]

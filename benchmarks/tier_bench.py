@@ -22,7 +22,7 @@ from pathlib import Path
 
 import jax
 
-from benchmarks.common import append_trajectory
+from benchmarks.common import append_trajectory, obs_digest
 from repro.core.advisor import advise_tier_split
 from repro.db import Table
 from repro.query import physical
@@ -61,7 +61,7 @@ def _run_policy(table, trace, tiers, policy, chunk_rows, sla_s):
         "served": s["served"],
         "rejected": s["rejected"],
         "energy_j": s["tier"]["energy_j"],
-    }, wall_us
+    }, wall_us, eng
 
 
 def rows():
@@ -82,13 +82,17 @@ def rows():
             for tq in trace) / len(trace)
         sla_s = SLA_SLACK * bytes_typ / tiers.fast.bandwidth
         for policy in Policy:
-            r, wall_us = _run_policy(table, trace, tiers, policy,
-                                     chunk_rows, sla_s)
+            r, wall_us, eng = _run_policy(table, trace, tiers, policy,
+                                          chunk_rows, sla_s)
             out.append((f"tier/{policy.value}/skew={skew:g}", wall_us,
                         f"hit={r['hit_rate']:.2f},"
                         f"{r['blended_gbps']:.2f}GBps,"
                         f"att={r['sla_attainment']:.2f}"))
             record["policies"].setdefault(policy.value, {})[str(skew)] = r
+            if policy is Policy.MEMCACHE and skew == 1.1:
+                # the headline run (check_regress gates on it) carries
+                # the trace-diff baseline digest
+                record["obs"] = obs_digest(eng)
         adv = advise_tier_split(
             table.nbytes, bytes_typ, sla_s,
             hit_curve=zipf_hit_curve(n_cols, skew),

@@ -208,6 +208,110 @@ def advise_tier_split(db_bytes: float, bytes_per_query: float, sla_s: float,
                 fast_gbps * 1e9 * chips <= roofline_bps * (1 + 1e-9)}
 
 
+def whatif_fast_fraction(attribution, *, db_bytes: float,
+                         bytes_per_query: float, sla_s: float,
+                         current_fraction: float, hit_curve,
+                         fast_gbps: float, capacity_gbps: float,
+                         chips: int = 1, fractions=None) -> dict:
+    """What-if: convert critical-path attribution into the estimated gain
+    from raising the fast-tier fraction.
+
+    `attribution` is a repro.obs.critical_path.Attribution (or any object
+    with `.seconds` — category -> total path seconds — and `.queries`).
+    The read-bound categories (fast_read, capacity_read, stream_wait)
+    are the seconds a bigger fast tier can move; queue, recovery, and
+    throttle are carried over unchanged — the attribution *measured*
+    that they are not read-rate-bound, which is exactly the information
+    a blended-rate model alone cannot see.
+
+    At each candidate fraction f the measured per-query read time is
+    scaled by the analytic blended-time ratio
+    `t_model(hit(f)) / t_model(hit(current_fraction))` — so overlap or
+    layout effects baked into the measurement are preserved while the
+    hit-rate improvement moves it. Every row's analytic response time is
+    cross-checked against `advise_tier_split` (the tier decision
+    surface, an independent pass through blended_bps + the Eq. 4
+    roofline) to 1e-6 relative — a drifted formula raises instead of
+    advising from it.
+    """
+    from repro.serve.sla import blended_bps
+
+    seconds = dict(getattr(attribution, "seconds", attribution))
+    queries = max(int(getattr(attribution, "queries", 0)) or 1, 1)
+    if not 0.0 <= current_fraction <= 1.0:
+        raise ValueError(f"current_fraction={current_fraction} must be "
+                         f"in [0, 1]")
+    read_cats = ("fast_read", "capacity_read", "stream_wait")
+    read_s = sum(seconds.get(c, 0.0) for c in read_cats) / queries
+    other_s = (sum(seconds.values()) / queries) - read_s
+    if read_s <= 0:
+        raise ValueError(
+            "attribution has no read-bound path seconds (fast_read/"
+            "capacity_read/stream_wait all zero); there is nothing a "
+            "bigger fast tier could speed up")
+
+    surface = advise_tier_split(
+        db_bytes, bytes_per_query, sla_s, hit_curve=hit_curve,
+        fast_gbps=fast_gbps, capacity_gbps=capacity_gbps, chips=chips,
+        fractions=fractions)
+    curve = (hit_curve if callable(hit_curve)
+             else None)
+
+    def model_t(h: float) -> float:
+        rate = blended_bps(fast_gbps * 1e9, capacity_gbps * 1e9,
+                           h) * chips
+        return bytes_per_query / rate
+
+    # current operating point: hit rate via the surface's own curve
+    # handling (dict curves get the same interpolation the rows used)
+    if curve is not None:
+        h0 = min(max(float(curve(current_fraction)), 0.0), 1.0)
+    else:
+        xs = sorted(hit_curve)
+        ys = [hit_curve[x] for x in xs]
+        if xs and xs[0] > 0.0:
+            xs, ys = [0.0] + xs, [0.0] + ys
+        h0 = min(max(float(np.interp(current_fraction, xs, ys)), 0.0),
+                 1.0)
+    t0 = model_t(h0)
+
+    rows = []
+    for srow in surface["rows"]:
+        h = srow["hit_rate"]
+        t_model = model_t(h)
+        # the cross-check: same number through the decision surface
+        rel = abs(t_model - srow["response_time_s"]) \
+            / max(srow["response_time_s"], 1e-30)
+        if rel > 1e-6:
+            raise ValueError(
+                f"what-if response model disagrees with "
+                f"advise_tier_split at fraction "
+                f"{srow['fast_fraction']}: {t_model!r} vs "
+                f"{srow['response_time_s']!r} (rel {rel:.3g})")
+        est_read = read_s * (t_model / t0)
+        est_resp = other_s + est_read
+        rows.append({
+            "fast_fraction": srow["fast_fraction"],
+            "hit_rate": h,
+            "est_read_s": est_read,
+            "est_response_s": est_resp,
+            "est_gain_s": read_s - est_read,
+            "meets_sla": est_resp <= sla_s,
+            "within_roofline": srow["within_roofline"],
+        })
+    best = next((r for r in rows if r["meets_sla"]), None)
+    return {
+        "sla_s": sla_s,
+        "chips": chips,
+        "current": {"fast_fraction": current_fraction, "hit_rate": h0,
+                    "read_s": read_s, "other_s": other_s,
+                    "response_s": read_s + other_s},
+        "rows": rows,
+        "best": best,
+        "surface": surface,
+    }
+
+
 def advise_cost(db_bytes: float, bytes_per_query: float, sla_s: float,
                 power_budget_w: float, *, skew: float | None = None,
                 fast_gbps: float | None = None, sheet=None,

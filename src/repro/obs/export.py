@@ -85,6 +85,12 @@ def chrome_trace(tracer) -> dict:
                 "ph": "X", "pid": qt.tenant, "tid": _lane(sp.kind),
                 "cat": sp.kind, "name": _name(sp), "ts": _us(sp.t0),
                 "dur": _us(sp.dur_s), "args": _args(sp)})
+    # schema invariant the export tests pin: within every (pid, tid)
+    # lane the X events are ts-monotone, so viewers never reorder them.
+    # Metadata (M) keeps its emission order ahead of all X events.
+    events.sort(key=lambda e: (e["ph"] != "M", e.get("pid", 0),
+                               e.get("tid", 0), e.get("ts", 0.0),
+                               e.get("dur", 0.0), e.get("name", "")))
     return {"traceEvents": events, "displayTimeUnit": "ms"}
 
 

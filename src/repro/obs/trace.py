@@ -93,12 +93,14 @@ class QueryTrace:
 
     def __init__(self, qid: int, *, tenant: int = 0,
                  submitted_at: float = 0.0, deadline: float = math.inf,
-                 bytes_expected: int = 0):
+                 bytes_expected: int = 0, shape: str = "scan"):
         self.qid = qid
         self.tenant = tenant
         self.submitted_at = submitted_at
         self.deadline = deadline
         self.bytes_expected = int(bytes_expected)
+        self.shape = shape        # "scan" | "grouped" | "join" — the query
+        #                           shape key trace-diff attribution uses
         self.spans: list[Span] = []
         self.reads: list[Span] = []   # the per-chunk "read" spans, in
         #                               on_access emission order

@@ -31,7 +31,7 @@ from repro.kernels.dispatch import KernelMode
 from repro.obs import metrics as obs_metrics
 from repro.obs.trace import NullTracer, layout_pipeline, layout_sync
 from repro.query import physical
-from repro.query.plan import Query, is_grouped
+from repro.query.plan import HashJoin, Query, is_grouped
 from repro.serve.sla import DeadlineQueue, SLAReport, summarize
 
 
@@ -84,7 +84,7 @@ class QueryEngine:
     def __init__(self, table, *, mode=KernelMode.AUTO,
                  clock=time.perf_counter, est_gbps: float = 1.0,
                  tiered=None, power_cap=None, chaos=None, prefetch=None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, monitor=None):
         self.table = table
         self.mode = KernelMode(mode)
         self.tiered = tiered
@@ -142,6 +142,11 @@ class QueryEngine:
             raise ValueError(
                 "power_cap needs the tiered energy model; pass "
                 "tiered=repro.tier.PlacementEngine(...) as well")
+        self.monitor = monitor
+        if monitor is not None:
+            # bind() enforces tiered mode: the monitor's ticks and burn
+            # windows live on the modeled clock, like the tracer's spans
+            monitor.bind(self)
         self.clock = clock
         self.queue = DeadlineQueue(clock, self._est_service_s)
         self.reports: list[SLAReport] = []
@@ -263,7 +268,11 @@ class QueryEngine:
         pend = _Pending(self._qid, query, nbytes, self.clock(),
                         chunks=chunks, tenant=tenant,
                         logical_bytes=self.logical_bytes(query))
-        return pend.qid if self.queue.push(pend, deadline) else None
+        if self.queue.push(pend, deadline):
+            return pend.qid
+        if self.monitor is not None:
+            self.monitor.observe_rejected(tenant=tenant)
+        return None
 
     # --- execution --------------------------------------------------------
     def _execute(self, query: Query) -> dict:
@@ -301,7 +310,12 @@ class QueryEngine:
         spans, to the query) without touching the process-global shims."""
         batch: list[QueryResult] = []
         while True:
+            n_rej = len(self.queue.rejected)
             got = self.queue.pop()        # sheds now-hopeless queries
+            if self.monitor is not None:
+                # each shed query broke its promise without being served
+                for p in self.queue.rejected[n_rej:]:
+                    self.monitor.observe_rejected(tenant=p.tenant)
             if got is None:
                 break
             pend, deadline = got
@@ -330,9 +344,12 @@ class QueryEngine:
 
     def _serve_one(self, pend: _Pending, deadline: float) -> QueryResult:
         t0 = self.clock()
+        shape = ("join" if isinstance(pend.query, HashJoin)
+                 else "grouped" if is_grouped(pend.query) else "scan")
         qt = self.tracer.begin_query(
             pend.qid, tenant=pend.tenant, submitted_at=pend.submitted_at,
-            deadline=deadline, bytes_expected=pend.bytes_scanned)
+            deadline=deadline, bytes_expected=pend.bytes_scanned,
+            shape=shape)
         trace = qt if qt.enabled else None
         if trace is not None:
             qt.begin_run(t0)
@@ -435,6 +452,13 @@ class QueryEngine:
             rid=pend.qid, deadline=deadline,
             submitted_at=pend.submitted_at, finished_at=t1,
             work=pend.bytes_scanned, degraded=error is not None))
+        if self.monitor is not None:
+            # tick first: a cadence boundary at or before t1 samples the
+            # world *before* this completion lands, so a completion at
+            # exactly a boundary counts at the next tick — one
+            # deterministic convention, byte-identical across replays
+            self.monitor.tick(t1)
+            self.monitor.observe(self.reports[-1], tenant=pend.tenant)
         self.results.append(res)
         return res
 
@@ -461,6 +485,8 @@ class QueryEngine:
             out["resilience"] = self.chaos.summary()
         if getattr(self.tracer, "enabled", False):
             out["trace"] = self.tracer.summary()
+        if self.monitor is not None:
+            out["slo"] = self.monitor.summary()
         return out
 
     def model_check(self, system=None) -> dict:

@@ -306,11 +306,17 @@ class ChaosHarness:
                 cap_b += nbytes
                 self.failovers += 1
                 if trace is not None:
-                    trace.add("failover", t0=at, dur_s=fo, nbytes=nbytes,
+                    # the span's duration is the failover's *extra* beyond
+                    # the clean read the nominal service already priced
+                    # (this method returns total - clean_s), so the
+                    # recovery timeline closes exactly at the query's
+                    # modeled t_end — the critical-path closure invariant
+                    ride = max(fo - clean_s, 0.0)
+                    trace.add("failover", t0=at, dur_s=ride, nbytes=nbytes,
                               tier="capacity", ledger="recovery",
                               joules=nbytes * cap_e, cid=cid,
                               attempt=attempt)
-                    at += fo
+                    at += ride
                 break
             rt = self.retry.timeout_s + self.retry.backoff(attempt)
             total += rt

@@ -159,15 +159,31 @@ class VirtualClock:
         return self.now
 
 
+def latency_percentile(latencies, q: float) -> float:
+    """np.percentile with the edge cases pinned (regression-tested in
+    tests/test_obs_analysis.py):
+
+    - empty input  -> 0.0 (no latency evidence; a NaN would poison every
+      downstream comparison, and "no queries" is not "slow queries")
+    - one sample   -> that sample, for every q (the only order statistic)
+    - all-equal    -> that value exactly (linear interpolation between
+      equal order statistics introduces no float error)
+    """
+    lat = np.asarray(latencies, float)
+    if lat.size == 0:
+        return 0.0
+    return float(np.percentile(lat, q))
+
+
 def summarize(reports: list[SLAReport], rejected: int = 0) -> dict:
     """Attainment + latency percentiles for a batch of SLAReports."""
-    lat = np.asarray([r.latency_s for r in reports], float)
+    lat = [r.latency_s for r in reports]
     met = sum(1 for r in reports if r.met)
     return {
         "served": len(reports),
         "rejected": rejected,
         "degraded": sum(1 for r in reports if r.degraded),
         "sla_attainment": met / len(reports) if reports else 1.0,
-        "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
-        "latency_p99_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+        "latency_p50_s": latency_percentile(lat, 50),
+        "latency_p99_s": latency_percentile(lat, 99),
     }

@@ -148,7 +148,7 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
                  chunk_rows: int = 1024, warmup_fraction: float = 1 / 3,
                  mode: str = "xla_ref", compute_w: float = 0.0,
                  power_cap=None, chaos=None, prefetch_bytes: int = 0,
-                 tracer=None):
+                 tracer=None, monitor=None):
     """Closed-loop replay of a trace against a tiered QueryEngine — the
     one attainment methodology shared by benchmarks/tier_bench.py,
     examples/tiered_store.py, and tests.
@@ -181,6 +181,10 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
     `tracer` (a repro.obs.Tracer) records every query's span tree on the
     replay's VirtualClock — deterministic, so a seeded chaos replay
     exports byte-identical trace JSON on every run (repro.obs.export).
+
+    `monitor` (a repro.obs.SLOMonitor) samples its burn-rate series at
+    cadence ticks of the same VirtualClock and fires multi-window SLO
+    alerts at deterministic virtual timestamps (repro.obs.slo).
     """
     from repro.energy.meter import EnergyMeter
     from repro.query import QueryEngine
@@ -196,7 +200,7 @@ def replay_trace(table, trace, tiers, policy, *, sla_s: float | None = None,
     clk = VirtualClock()
     eng = QueryEngine(table, mode=mode, tiered=pe, clock=clk,
                       power_cap=power_cap, chaos=chaos, prefetch=pf,
-                      tracer=tracer)
+                      tracer=tracer, monitor=monitor)
     warmup = int(len(trace) * warmup_fraction) if sla_s is not None else \
         len(trace)
     met = offered = 0
